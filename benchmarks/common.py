@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: result records + CSV emission."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "benchmarks"
+
+
+def emit(rows: List[Dict[str, Any]], name: str) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    for r in rows:
+        fields = ",".join(f"{k}={v}" for k, v in r.items() if k != "name")
+        print(f"{name}/{r.get('name', '?')},{fields}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0

@@ -1,0 +1,38 @@
+"""Paper Fig. 2: model size vs inference cost / accuracy / delay trade-off
+for LLM-only serving (the motivation plot), from the cost model + quality
+calibration (Qwen2.5 family proxies)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cost_model import inference_tflops
+
+# (params_b, llm-only accuracy proxy, tokens/s on the edge GPU)
+FAMILY = {
+    "0.5b": (0.5, 0.18, 260.0),
+    "1.5b": (1.5, 0.25, 140.0),
+    "3b": (3.0, 0.33, 90.0),
+    "7b": (7.0, 0.42, 55.0),
+    "14b": (14.0, 0.50, 30.0),
+    "32b": (32.0, 0.58, 14.0),
+    "72b": (72.0, 0.65, 7.0),
+}
+
+IN_TOK, OUT_TOK = 16.0, 27.0
+
+
+def run(quick: bool = False):
+    rows = []
+    for name, (pb, acc, tps) in FAMILY.items():
+        rows.append({
+            "name": name,
+            "params_b": pb,
+            "tflops": round(inference_tflops(pb, IN_TOK, OUT_TOK), 3),
+            "accuracy_proxy": acc,
+            "delay_s": round(OUT_TOK / tps, 3),
+        })
+    emit(rows, "fig2_modelsize")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

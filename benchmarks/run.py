@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure. Prints CSV rows
+``<table>/<name>,k=v,...`` and writes JSON under results/benchmarks/.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    fig2_modelsize, fig4_ablation, kernels_bench, table1_tokens,
+    table4_overall, table5_warmup, table6_slms,
+)
+
+MODULES = {
+    "fig2": fig2_modelsize,
+    "table1": table1_tokens,
+    "table4": table4_overall,
+    "table5": table5_warmup,
+    "table6": table6_slms,
+    "fig4": fig4_ablation,
+    "kernels": kernels_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step counts (CI)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    names = list(MODULES) if not args.only else args.only.split(",")
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.time()
+        print(f"# === {name} ({mod.__name__}) ===", flush=True)
+        mod.run(quick=args.quick)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

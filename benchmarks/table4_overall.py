@@ -1,0 +1,75 @@
+"""Paper Table 4: overall comparison of EACO-RAG vs fixed baselines on both
+corpora under cost-efficient (delay<=5s) and delay-oriented (delay<=1s)
+settings. Reports accuracy / delay / cost and the cost reduction vs the
+always-72B+GraphRAG baseline (the paper's 84.6% / 65.3% claims)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cluster.simulator import EACOCluster, SimConfig
+from repro.data.corpus import specialized_like, wiki_like
+
+BASELINES = {
+    "3b_llm_only": "fixed:0",
+    "3b_naive_rag": "fixed:1",
+    "3b_graphrag": "fixed:2",
+    "72b_graphrag": "fixed:3",
+}
+
+# (setting name, qos_min_acc, qos_max_delay, warmup).
+# Delay-oriented uses the strict 1 s bound: on wiki-like traffic the gate
+# keeps fast edge paths for covered queries and shifts the rest cloud-ward;
+# on the specialized corpus (longer retrieval prompts push the edge path
+# over 1 s) it escalates much harder — the paper's wiki/HP asymmetry
+# (their delay-oriented costs: 247 vs 496 TFLOPs).
+EACO_SETTINGS = [
+    ("eaco_cost_efficient", 0.85, 5.0, 300),
+    ("eaco_delay_oriented", 0.85, 1.0, 300),
+]
+
+
+def run(n_fixed: int = 400, n_eaco: int = 1500, seed: int = 0,
+        quick: bool = False):
+    if quick:
+        n_fixed, n_eaco = 150, 500
+    rows = []
+    for corpus_name, corpus_fn in [("wiki", wiki_like), ("hp", specialized_like)]:
+        corpus = corpus_fn(seed)
+        ref_cost = None
+        for name, pol in BASELINES.items():
+            sim = EACOCluster(corpus, SimConfig(seed=seed), policy=pol)
+            sim.run(n_fixed)
+            m = sim.metrics(skip_warmup=False)
+            if name == "72b_graphrag":
+                ref_cost = m["cost_mean"]
+            rows.append({
+                "name": f"{corpus_name}/{name}",
+                "accuracy": round(m["accuracy"], 4),
+                "delay_s": round(m["delay_mean"], 3),
+                "delay_std": round(m["delay_std"], 3),
+                "cost_tflops": round(m["cost_mean"], 2),
+                "cost_std": round(m["cost_std"], 2),
+            })
+        for name, qa, qd, warm in EACO_SETTINGS:
+            sim = EACOCluster(
+                corpus, SimConfig(seed=seed, qos_min_acc=qa,
+                                  qos_max_delay=qd, warmup_steps=warm),
+                policy="eaco")
+            sim.run(n_eaco)
+            m = sim.metrics()
+            red = 100.0 * (1 - m["cost_mean"] / ref_cost) if ref_cost else 0.0
+            rows.append({
+                "name": f"{corpus_name}/{name}",
+                "accuracy": round(m["accuracy"], 4),
+                "delay_s": round(m["delay_mean"], 3),
+                "cost_tflops": round(m["cost_mean"], 2),
+                "cost_reduction_vs_72b_pct": round(red, 1),
+                "arm_fracs": [round(a, 3) for a in m["arm_fracs"]],
+            })
+    emit(rows, "table4_overall")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Table 5: effect of warm-up steps on EACO-RAG's gating decisions."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.cluster.simulator import EACOCluster, SimConfig
+from repro.data.corpus import specialized_like, wiki_like
+
+
+def run(n_post: int = 1000, seed: int = 0, quick: bool = False):
+    if quick:
+        n_post = 400
+    rows = []
+    for corpus_name, corpus_fn, warmups in [
+        ("wiki", wiki_like, (100, 200, 300)),
+        ("hp", specialized_like, (100, 300, 500)),
+    ]:
+        corpus = corpus_fn(seed)
+        for w in warmups:
+            sim = EACOCluster(
+                corpus, SimConfig(seed=seed, warmup_steps=w,
+                                  qos_min_acc=0.85, qos_max_delay=5.0),
+                policy="eaco")
+            sim.run(w + n_post)
+            m = sim.metrics()
+            # early window right after warm-up: this is where the amount of
+            # exploration data shows (the gate keeps learning online, so a
+            # long average dilutes the effect the paper's Table 5 measures)
+            exploit = [l for l in sim.logs if l.phase == "exploit"]
+            early = exploit[: min(300, len(exploit))]
+            import numpy as np
+            rows.append({
+                "name": f"{corpus_name}/eaco-{w}",
+                "warmup": w,
+                "accuracy": round(m["accuracy"], 4),
+                "delay_s": round(m["delay_mean"], 3),
+                "cost_tflops": round(m["cost_mean"], 2),
+                "early300_cost": round(float(np.mean([l.cost for l in early])), 2),
+                "early300_acc": round(float(np.mean([l.correct for l in early])), 4),
+                "arm_fracs": [round(a, 3) for a in m["arm_fracs"]],
+            })
+    emit(rows, "table5_warmup")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Adaptive knowledge update under interest drift — the paper's core C2
+mechanism, isolated (no gate, no cloud generation).
+
+Edge stores start seeded with each edge's initially-popular topics. The
+workload's regional interests then drift every `--period` steps. With
+adaptive updates ON, the cloud ships GraphRAG community chunks matched to
+each edge's recent queries (FIFO, 20-query trigger); with updates OFF the
+stores go stale. We plot retrieval hit-rate over time for both, plus the
+edge-assisted variant.
+
+Run:  PYTHONPATH=src python examples/knowledge_drift.py --steps 600
+"""
+import argparse
+
+import numpy as np
+
+from repro.cluster.simulator import EACOCluster, SimConfig
+from repro.data.corpus import wiki_like
+
+
+def run(corpus, *, updates: bool, assist: bool, steps: int, period: float,
+        seed: int = 0):
+    cfg = SimConfig(
+        seed=seed,
+        update_trigger=20 if updates else 10 ** 9,
+        edge_assist_enabled=assist,
+        drift_period=period,
+        initial_fill=0.5,
+        edge_capacity=120,
+    )
+    sim = EACOCluster(corpus, cfg, policy="fixed:1")
+    sim.run(steps)
+    hits = np.array([l.hit for l in sim.logs], dtype=float)
+    return hits
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--period", type=float, default=150.0)
+    ap.add_argument("--window", type=int, default=100)
+    args = ap.parse_args()
+
+    corpus = wiki_like(seed=0)
+    runs = {
+        "no-update, local-only": run(corpus, updates=False, assist=False,
+                                     steps=args.steps, period=args.period),
+        "adaptive,  local-only": run(corpus, updates=True, assist=False,
+                                     steps=args.steps, period=args.period),
+        "adaptive,  edge-assist": run(corpus, updates=True, assist=True,
+                                      steps=args.steps, period=args.period),
+    }
+    W = args.window
+    n_win = args.steps // W
+    print(f"retrieval hit-rate per {W}-step window "
+          f"(interest drift every {args.period:.0f} steps):\n")
+    header = "window:".ljust(24) + "".join(f"{i:>7d}" for i in range(n_win))
+    print(header)
+    for name, hits in runs.items():
+        cells = "".join(f"{hits[i*W:(i+1)*W].mean():>7.2f}"
+                        for i in range(n_win))
+        print(name.ljust(24) + cells + f"   | overall {hits.mean():.3f}")
+    print("\nAs interests drift, the stale store's hit-rate decays; the "
+          "FIFO updates track the drift; edge-assist adds cross-region "
+          "coverage on top (paper Fig. 4 mechanics).")
+
+
+if __name__ == "__main__":
+    main()

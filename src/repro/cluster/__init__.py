@@ -1,0 +1,10 @@
+from repro.cluster.network import NetworkConfig, NetworkModel
+from repro.cluster.oracle import AccuracyOracle, ArmQuality, DEFAULT_QUALITY
+from repro.cluster.simulator import EACOCluster, SimConfig, StepLog
+from repro.cluster.workload import QueryEvent, WorkloadConfig, WorkloadGenerator
+
+__all__ = [
+    "NetworkModel", "NetworkConfig", "AccuracyOracle", "ArmQuality",
+    "DEFAULT_QUALITY", "EACOCluster", "SimConfig", "StepLog",
+    "WorkloadGenerator", "WorkloadConfig", "QueryEvent",
+]

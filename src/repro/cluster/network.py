@@ -1,0 +1,42 @@
+"""Edge-cloud network delay model: lognormal jitter around tier baselines
+plus slowly-varying congestion (the gate's d_t context)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+
+@dataclass
+class NetworkConfig:
+    edge_local_ms: float = 20.0
+    inter_edge_ms: float = 32.0
+    cloud_ms: float = 300.0
+    jitter_sigma: float = 0.25          # lognormal sigma
+    congestion_period: float = 400.0    # steps per congestion cycle
+    congestion_amp: float = 0.5         # peak multiplier-1 on cloud path
+
+
+class NetworkModel:
+    def __init__(self, cfg: NetworkConfig = NetworkConfig(), seed: int = 0):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+
+    def _jit(self, base_ms: float) -> float:
+        return base_ms * float(self.rng.lognormal(0.0, self.cfg.jitter_sigma))
+
+    def edge_local(self, t: float = 0.0) -> float:
+        return self._jit(self.cfg.edge_local_ms) / 1000.0
+
+    def inter_edge(self, t: float = 0.0) -> float:
+        return self._jit(self.cfg.inter_edge_ms) / 1000.0
+
+    def cloud(self, t: float = 0.0) -> float:
+        cong = 1.0 + self.cfg.congestion_amp * 0.5 * (
+            1.0 + math.sin(2 * math.pi * t / self.cfg.congestion_period))
+        return self._jit(self.cfg.cloud_ms * cong) / 1000.0
+
+
+__all__ = ["NetworkModel", "NetworkConfig"]

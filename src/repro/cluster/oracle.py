@@ -1,0 +1,57 @@
+"""Answer-quality oracle (DESIGN.md §5: the calibrated simulation boundary).
+
+Accuracy per (strategy, query) is a Bernoulli draw whose probability depends
+on (a) the serving arm's model capacity, (b) whether retrieval actually
+surfaced the gold fact (computed from the real retrieved chunks), and
+(c) query complexity. Defaults are calibrated so population marginals match
+the paper's Table 4 (3B-only ~29-32%, +NaiveRAG ~52-62%, +GraphRAG ~63-76%,
+72B+GraphRAG ~77-94%).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ArmQuality:
+    p_hit: float            # retrieval surfaced the gold fact
+    p_miss: float           # it did not (parametric knowledge only)
+    multihop_factor: float  # multiplicative penalty on multi-hop queries
+
+
+# calibrated to Table 4 marginals given typical hit rates in our corpus.
+# Note the structure that makes the gate's job non-trivial AND solvable:
+# conditional on (retrieval hit, single-hop) the cheap arms are highly
+# accurate (>=0.93), while misses and multi-hop queries drag their
+# *marginal* accuracy down to the paper's 52-76% band.
+DEFAULT_QUALITY: Dict[str, ArmQuality] = {
+    "slm-only":      ArmQuality(0.34, 0.34, 0.55),
+    "edge-rag+slm":  ArmQuality(0.97, 0.20, 0.42),
+    "graphrag+slm":  ArmQuality(0.96, 0.30, 0.75),
+    "graphrag+llm":  ArmQuality(0.985, 0.72, 0.92),
+}
+
+
+class AccuracyOracle:
+    def __init__(self, quality: Dict[str, ArmQuality] = None, seed: int = 0):
+        self.quality = dict(DEFAULT_QUALITY)
+        if quality:
+            self.quality.update(quality)
+        self.rng = np.random.default_rng(seed)
+
+    def p_correct(self, arm_name: str, *, hit: bool, multihop: bool) -> float:
+        q = self.quality[arm_name]
+        p = q.p_hit if hit else q.p_miss
+        if multihop:
+            p *= q.multihop_factor
+        return min(max(p, 0.0), 1.0)
+
+    def draw(self, arm_name: str, *, hit: bool, multihop: bool) -> bool:
+        return bool(self.rng.random() < self.p_correct(
+            arm_name, hit=hit, multihop=multihop))
+
+
+__all__ = ["AccuracyOracle", "ArmQuality", "DEFAULT_QUALITY"]

@@ -1,0 +1,75 @@
+"""Query workload with spatial (per-edge topic affinity) and temporal
+(interest drift) variation — the paper's Table 2 phenomenology."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.data.corpus import Corpus, QAPair
+
+
+@dataclass
+class WorkloadConfig:
+    n_edges: int = 6
+    drift_period: float = 250.0     # steps between interest re-draws
+    drift_strength: float = 0.6     # 0 = static, 1 = full resample
+    concentration: float = 0.5      # Dirichlet alpha (lower = peakier)
+
+
+@dataclass
+class QueryEvent:
+    t: float
+    edge_id: str
+    qa: QAPair
+
+
+class WorkloadGenerator:
+    """Each edge has a drifting Dirichlet interest vector over topics."""
+
+    def __init__(self, corpus: Corpus, cfg: WorkloadConfig = WorkloadConfig(),
+                 seed: int = 0):
+        self.corpus = corpus
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+        self.edge_ids = [f"edge{i}" for i in range(cfg.n_edges)]
+        self.qa_by_topic: Dict[str, List[QAPair]] = {}
+        for qa in corpus.qa:
+            self.qa_by_topic.setdefault(qa.topic, []).append(qa)
+        self.topics = [t for t in corpus.topics if t in self.qa_by_topic]
+        self._interest = {e: self._draw_interest() for e in self.edge_ids}
+        self._last_drift = 0.0
+
+    def _draw_interest(self) -> np.ndarray:
+        k = len(self.topics)
+        return self.rng.dirichlet(np.full(k, self.cfg.concentration))
+
+    def _maybe_drift(self, t: float):
+        if t - self._last_drift >= self.cfg.drift_period:
+            self._last_drift = t
+            s = self.cfg.drift_strength
+            for e in self.edge_ids:
+                fresh = self._draw_interest()
+                self._interest[e] = (1 - s) * self._interest[e] + s * fresh
+                self._interest[e] /= self._interest[e].sum()
+
+    def interest(self, edge_id: str) -> np.ndarray:
+        return self._interest[edge_id]
+
+    def popular_topics(self, edge_id: str, k: int = 2) -> List[str]:
+        order = np.argsort(-self._interest[edge_id])[:k]
+        return [self.topics[int(i)] for i in order]
+
+    def stream(self, n_steps: int) -> Iterator[QueryEvent]:
+        for t in range(n_steps):
+            self._maybe_drift(float(t))
+            edge = self.edge_ids[int(self.rng.integers(len(self.edge_ids)))]
+            p = self._interest[edge]
+            topic = self.topics[int(self.rng.choice(len(self.topics), p=p))]
+            qa_list = self.qa_by_topic[topic]
+            qa = qa_list[int(self.rng.integers(len(qa_list)))]
+            yield QueryEvent(float(t), edge, qa)
+
+
+__all__ = ["WorkloadGenerator", "WorkloadConfig", "QueryEvent"]

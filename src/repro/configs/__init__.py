@@ -1,0 +1,47 @@
+"""Architecture registry: 10 assigned architectures + reduced smoke variants."""
+from __future__ import annotations
+
+from repro.configs.base import (
+    DECODE_32K, INPUT_SHAPES, LONG_500K, PREFILL_32K, TRAIN_4K,
+    InputShape, MLAConfig, ModelConfig, MoEConfig, SSMConfig,
+)
+
+from repro.configs.llama3_2_vision_11b import CONFIG as LLAMA32_VISION_11B
+from repro.configs.deepseek_v2_lite_16b import CONFIG as DEEPSEEK_V2_LITE_16B
+from repro.configs.whisper_base import CONFIG as WHISPER_BASE
+from repro.configs.qwen1_5_32b import CONFIG as QWEN1_5_32B
+from repro.configs.qwen2_0_5b import CONFIG as QWEN2_0_5B
+from repro.configs.zamba2_2_7b import CONFIG as ZAMBA2_2_7B
+from repro.configs.rwkv6_3b import CONFIG as RWKV6_3B
+from repro.configs.gemma3_4b import CONFIG as GEMMA3_4B
+from repro.configs.olmoe_1b_7b import CONFIG as OLMOE_1B_7B
+from repro.configs.qwen2_72b import CONFIG as QWEN2_72B
+
+ARCHS: dict[str, ModelConfig] = {
+    c.arch_id: c
+    for c in (
+        LLAMA32_VISION_11B, DEEPSEEK_V2_LITE_16B, WHISPER_BASE, QWEN1_5_32B,
+        QWEN2_0_5B, ZAMBA2_2_7B, RWKV6_3B, GEMMA3_4B, OLMOE_1B_7B, QWEN2_72B,
+    )
+}
+
+
+def get_config(arch_id: str, reduced: bool = False) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    cfg = ARCHS[arch_id]
+    return cfg.reduced() if reduced else cfg
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, shape) is runnable; reason when skipped (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, "full-attention arch: 500k decode requires sub-quadratic variant"
+    return True, ""
+
+
+__all__ = [
+    "ARCHS", "get_config", "shape_applicable",
+    "InputShape", "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+    "INPUT_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

@@ -1,0 +1,276 @@
+"""Config system: model/architecture configs and input-shape specs.
+
+Every assigned architecture gets one module in this package defining a
+``ModelConfig`` with the exact published hyperparameters (source cited in the
+module docstring) plus a ``reduced()`` smoke variant (<=2 layers,
+d_model<=512, <=4 experts) used by CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned; see the task brief)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0            # routed experts
+    top_k: int = 0
+    n_shared_experts: int = 0
+    expert_ff: int = 0            # per-expert hidden size
+    first_k_dense: int = 0        # leading layers that use a dense FFN
+    dense_ff: int = 0             # hidden size of those dense layers
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # "auto": XLA SPMD propagation; "ep": explicit expert-parallel shard_map
+    # schedule (local dispatch -> local expert FFN -> psum combine) — the
+    # beyond-paper §Perf optimization.
+    shard_mode: str = "auto"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 0         # compressed kv dim (cached at decode)
+    q_lora_rank: int = 0          # 0 = direct q projection
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 0
+    d_head: int = 64              # per-head channel dim for mamba2 / rwkv
+    expand: int = 2               # mamba2 inner expansion
+    conv_width: int = 4           # mamba2 depthwise conv width
+    chunk: int = 256              # chunked-scan block length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                  # 0 for attention-free (rwkv)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # sliding-window attention: window size and pattern (local:global).
+    sliding_window: int = 0       # 0 = full attention everywhere
+    swa_pattern: Tuple[int, int] = (0, 0)   # (n_local, n_global) per repeat unit
+
+    # hybrid (zamba2): one shared attention block applied every k SSM blocks
+    shared_attn_every: int = 0
+
+    # enc-dec (whisper): encoder depth; n_layers is the decoder depth
+    n_enc_layers: int = 0
+    n_frames: int = 1500          # stubbed audio-frame embeddings fed to encoder
+
+    # vlm (llama-3.2-vision): cross-attn layer interval; stubbed patch embeds
+    cross_attn_every: int = 0
+    n_image_tokens: int = 1601
+    vision_dim: int = 0           # dim of stubbed vision embeddings (0 = d_model)
+
+    # numerics / training
+    dtype: str = "bfloat16"
+    remat: bool = True
+    loss_chunk: int = 512         # sequence-chunked cross-entropy block
+    scan_layers: bool = True
+    q_chunk: int = 1024           # blockwise-attention query chunk
+    embed_scale: bool = False     # multiply embeddings by sqrt(d) (gemma)
+    rwkv_chunk: int = 1           # 1 = exact sequential wkv; >1 = chunked
+    kv_cache_dtype: str = "bf16"  # "bf16" | "int8" (per-token-head absmax)
+
+    source: str = ""              # citation for the config
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if the arch can serve a 500k-token context without a full
+        quadratic-attention KV cache (SSM/hybrid, or SWA-dominant dense)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0
+
+    @property
+    def activation_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        hd = self.resolved_head_dim
+        for i in range(self.n_layers):
+            total += 2 * d  # norms
+            if self._layer_is_ssm(i):
+                if self.family == "ssm":  # rwkv6
+                    total += rwkv6_block_params(d, self.d_ff)
+                else:
+                    total += mamba2_block_params(d, self.ssm)
+            else:
+                total += self._attn_params(d, hd)
+                total += self._ffn_params(i, d)
+        if self.shared_attn_every:
+            # one shared (weight-tied) attention + MLP block
+            total += self._attn_params(d, hd) + 3 * d * self.d_ff + 2 * d
+        if self.n_enc_layers:
+            for _ in range(self.n_enc_layers):
+                total += self._attn_params(d, hd) + d * self.d_ff * 3 + 2 * d
+            total += self.n_layers * (self._attn_params(d, hd) + d)  # cross-attn
+        if self.cross_attn_every:
+            n_x = self.n_layers // self.cross_attn_every
+            total += n_x * (self._attn_params(d, hd) + 2 * d)
+        return total
+
+    def n_active_params(self) -> int:
+        """Per-token active parameters (MoE: only top-k + shared experts)."""
+        if self.family != "moe":
+            return self.n_params()
+        d = self.d_model
+        m = self.moe
+        total = self.n_params()
+        # subtract inactive routed experts
+        per_expert = 3 * d * m.expert_ff
+        n_moe_layers = self.n_layers - m.first_k_dense
+        total -= n_moe_layers * (m.n_experts - m.top_k) * per_expert
+        return total
+
+    def _attn_params(self, d: int, hd: int) -> int:
+        if self.mla is not None:
+            m = self.mla
+            qd = m.qk_nope_dim + m.qk_rope_dim
+            p = d * (m.kv_lora_rank + m.qk_rope_dim)                 # down kv + rope k
+            p += m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+            if m.q_lora_rank:
+                p += d * m.q_lora_rank + m.q_lora_rank * self.n_heads * qd
+            else:
+                p += d * self.n_heads * qd
+            p += self.n_heads * m.v_head_dim * d                     # o proj
+            return p
+        q = d * self.n_heads * hd
+        kv = 2 * d * self.n_kv_heads * hd
+        o = self.n_heads * hd * d
+        b = (self.n_heads + 2 * self.n_kv_heads) * hd if self.qkv_bias else 0
+        return q + kv + o + b
+
+    def _ffn_params(self, layer: int, d: int) -> int:
+        if self.family == "moe" and layer >= self.moe.first_k_dense:
+            m = self.moe
+            per = 3 * d * m.expert_ff
+            return (m.n_experts + m.n_shared_experts) * per + d * m.n_experts
+        if self.family == "moe":
+            return 3 * d * self.moe.dense_ff
+        return 3 * d * self.d_ff
+
+    def _layer_is_ssm(self, i: int) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    # ---- reduced smoke variant ----------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """<=2 layers, d_model<=512, <=4 experts — same family/mechanisms."""
+        d = min(self.d_model, 256)
+        n_heads = max(1, min(self.n_heads, 4)) if self.n_heads else 0
+        ratio = max(1, self.n_heads // max(self.n_kv_heads, 1)) if self.n_heads else 1
+        n_kv = max(1, n_heads // min(ratio, n_heads)) if n_heads else 0
+        hd = 64 if (n_heads and d // n_heads < 32) else (d // n_heads if n_heads else 0)
+        kw = dict(
+            n_layers=2, d_model=d, n_heads=n_heads, n_kv_heads=n_kv,
+            d_ff=min(self.d_ff, 512), vocab=min(self.vocab, 1024),
+            head_dim=hd, loss_chunk=64, remat=False, q_chunk=64,
+        )
+        if self.moe.n_experts:
+            kw["moe"] = replace(
+                self.moe, n_experts=4, top_k=min(self.moe.top_k, 2),
+                n_shared_experts=min(self.moe.n_shared_experts, 1),
+                expert_ff=128, first_k_dense=min(self.moe.first_k_dense, 1),
+                dense_ff=256,
+            )
+        if self.mla is not None:
+            kw["mla"] = replace(self.mla, kv_lora_rank=64, q_lora_rank=0,
+                                qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32)
+        if self.ssm is not None:
+            kw["ssm"] = replace(self.ssm, d_state=16, d_head=32, chunk=32)
+        if self.sliding_window:
+            kw["sliding_window"] = 64
+            kw["swa_pattern"] = self.swa_pattern
+        if self.shared_attn_every:
+            kw["shared_attn_every"] = 2
+        if self.n_enc_layers:
+            kw["n_enc_layers"] = 2
+            kw["n_frames"] = 64
+        if self.cross_attn_every:
+            kw["cross_attn_every"] = 2
+            kw["n_image_tokens"] = 16
+        return replace(self, **kw)
+
+
+def mamba2_block_params(d: int, ssm: SSMConfig) -> int:
+    d_in = ssm.expand * d
+    n_heads = d_in // ssm.d_head
+    p = d * (2 * d_in + 2 * ssm.d_state + n_heads)   # in_proj(zx) + B,C proj + dt
+    p += ssm.conv_width * (d_in + 2 * ssm.d_state)   # depthwise conv
+    p += n_heads * 2                                  # A_log, D
+    p += d_in * d                                     # out proj
+    return p
+
+
+def rwkv6_block_params(d: int, d_ff: int) -> int:
+    # time-mix: r,k,v,g,o projections + data-dependent decay lora + token-shift mus
+    p = 5 * d * d
+    p += 2 * (d * 32 + 32 * d)     # decay + bonus low-rank adapters
+    p += 6 * d                      # token-shift interpolation params
+    p += d * d_ff + d_ff * d + d   # channel-mix (r gate shares d*d above approx)
+    return p
+
+
+__all__ = [
+    "InputShape", "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K", "INPUT_SHAPES",
+]

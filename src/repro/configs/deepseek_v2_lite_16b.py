@@ -1,0 +1,38 @@
+"""deepseek-v2-lite-16b — MoE + MLA. [arXiv:2405.04434]
+
+MLA: kv_lora_rank=512, decoupled rope head 64, nope 128, v_head 128.
+MoE: 64 routed experts top-6 + 2 shared, expert_ff=1408, first layer dense
+(d_ff=10944 per the V2-Lite card). The assignment line mentions "160 routed"
+(full V2); we follow the Lite spec cited: 64 routed, top-6.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, MLAConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,               # MLA: kv heads == heads after up-projection
+    d_ff=1408,
+    vocab=102_400,
+    head_dim=128,
+    rope_theta=10_000.0,
+    moe=MoEConfig(
+        n_experts=64,
+        top_k=6,
+        n_shared_experts=2,
+        expert_ff=1408,
+        first_k_dense=1,
+        dense_ff=10_944,
+        capacity_factor=1.25,
+    ),
+    mla=MLAConfig(
+        kv_lora_rank=512,
+        q_lora_rank=0,           # V2-Lite projects q directly
+        qk_nope_dim=128,
+        qk_rope_dim=64,
+        v_head_dim=128,
+    ),
+    source="arXiv:2405.04434 (DeepSeek-V2; Lite variant)",
+)

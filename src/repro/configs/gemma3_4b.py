@@ -1,0 +1,22 @@
+"""gemma3-4b — dense, GQA kv=4, 5:1 local:global sliding-window, 128k ctx.
+[hf:google/gemma-3-1b-pt family card, 4B variant]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=10_240,
+    vocab=262_144,
+    head_dim=256,
+    rope_theta=1_000_000.0,
+    sliding_window=1024,
+    swa_pattern=(5, 1),          # 5 local layers : 1 global layer
+    tie_embeddings=True,
+    embed_scale=True,
+    source="hf:google/gemma-3-1b-pt (family model card, 4B variant)",
+)

@@ -1,0 +1,25 @@
+"""llama-3.2-vision-11b — VLM: language decoder with cross-attn image layers.
+[hf:meta-llama/Llama-3.2-11B-Vision]
+
+The ViT vision encoder + projector are stubbed: ``input_specs()`` supplies
+projected patch embeddings (batch, n_image_tokens, d_model). The language
+stack is 40 layers with a gated cross-attention layer every 5 layers
+(8 cross-attn layers total), GQA kv=8.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14_336,
+    vocab=128_256,
+    head_dim=128,
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    n_image_tokens=1601,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

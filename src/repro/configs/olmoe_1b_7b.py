@@ -1,0 +1,24 @@
+"""olmoe-1b-7b — MoE, 64 experts top-8, GQA kv=16. [arXiv:2409.02060]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,                    # per-expert hidden (mirrors expert_ff)
+    vocab=50_304,
+    head_dim=128,
+    rope_theta=10_000.0,
+    moe=MoEConfig(
+        n_experts=64,
+        top_k=8,
+        n_shared_experts=0,
+        expert_ff=1024,
+        first_k_dense=0,
+        capacity_factor=1.25,
+    ),
+    source="arXiv:2409.02060 (OLMoE)",
+)

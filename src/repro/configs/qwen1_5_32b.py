@@ -1,0 +1,17 @@
+"""qwen1.5-32b — dense, GQA kv=40 (MHA-like), QKV bias. [hf:Qwen/Qwen1.5-0.5B family card]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27_392,
+    vocab=152_064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen1.5-0.5B (family model card, 32B variant)",
+)

@@ -1,0 +1,19 @@
+"""rwkv6-3b (Finch) — attention-free, data-dependent decay. [arXiv:2404.05892]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=0,                   # attention-free
+    n_kv_heads=0,
+    d_ff=8960,
+    vocab=65_536,
+    ssm=SSMConfig(
+        d_state=64,              # per-head wkv state is d_head x d_head
+        d_head=64,               # 2560/64 = 40 wkv heads
+        chunk=256,
+    ),
+    source="arXiv:2404.05892 (RWKV-6 Finch)",
+)

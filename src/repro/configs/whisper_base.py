@@ -1,0 +1,24 @@
+"""whisper-base — encoder-decoder, conv/mel frontend stubbed. [arXiv:2212.04356]
+
+n_layers is the decoder depth; the encoder has n_enc_layers. The audio
+frontend (mel spectrogram + 2x conv) is a stub: ``input_specs()`` supplies
+precomputed frame embeddings of shape (batch, n_frames, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-base",
+    family="encdec",
+    n_layers=6,                  # decoder layers
+    n_enc_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51_865,
+    head_dim=64,
+    rope_theta=0.0,              # whisper uses learned/sinusoidal positions
+    n_frames=1500,
+    tie_embeddings=True,
+    source="arXiv:2212.04356 (Whisper)",
+)

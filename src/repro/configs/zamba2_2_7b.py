@@ -1,0 +1,27 @@
+"""zamba2-2.7b — hybrid Mamba2 backbone + shared attention block. [arXiv:2411.15242]
+
+54 Mamba2 blocks; one *shared* (weight-tied) attention+MLP block is applied
+every 6 Mamba2 blocks (9 applications).
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10_240,
+    vocab=32_000,
+    head_dim=80,
+    ssm=SSMConfig(
+        d_state=64,
+        d_head=64,
+        expand=2,
+        conv_width=4,
+        chunk=256,
+    ),
+    shared_attn_every=6,
+    source="arXiv:2411.15242 (Zamba2)",
+)

@@ -1,0 +1,28 @@
+"""The paper's primary contribution: EACO-RAG core (gating, SafeOBO, GPs,
+adaptive knowledge update, edge-assisted retrieval, cost model)."""
+from repro.core.cost_model import (
+    PAPER_CLOUD, PAPER_EDGE, TPU_CLOUD, TPU_EDGE, CostWeights, TierSpec,
+    generation_delay, inference_tflops, time_cost_tflops, total_cost,
+)
+from repro.core.edge_assist import (
+    EdgeSelection, edge_assisted_search, query_keywords, select_edge,
+)
+from repro.core.gating import (
+    CONTEXT_DIM, PAPER_ARMS, Arm, CollaborativeGate, Decision, QueryContext,
+    context_features,
+)
+from repro.core.gp import GPHypers, GPState, gp_add, gp_init, gp_posterior
+from repro.core.knowledge import (
+    AdaptiveKnowledgeUpdater, KnowledgeUpdateConfig, UpdateStats,
+)
+from repro.core.safeobo import SafeOBO, SafeOBOConfig
+
+__all__ = [
+    "TierSpec", "CostWeights", "PAPER_EDGE", "PAPER_CLOUD", "TPU_EDGE",
+    "TPU_CLOUD", "inference_tflops", "generation_delay", "time_cost_tflops",
+    "total_cost", "EdgeSelection", "edge_assisted_search", "query_keywords",
+    "select_edge", "Arm", "PAPER_ARMS", "QueryContext", "context_features",
+    "CONTEXT_DIM", "CollaborativeGate", "Decision", "GPHypers", "GPState",
+    "gp_add", "gp_init", "gp_posterior", "SafeOBO", "SafeOBOConfig",
+    "AdaptiveKnowledgeUpdater", "KnowledgeUpdateConfig", "UpdateStats",
+]

@@ -1,0 +1,112 @@
+"""EACO-RAG cost model (paper §4.1, Tables 1 & 3).
+
+Total cost  u_t = δ1·u_r + δ2·u_d  with
+  u_r: resource cost in TFLOPs from token counts (Pope et al.: ~2·N FLOPs
+       per token for inference of an N-parameter dense model),
+  u_d: time cost, *scaled into TFLOPs* by the peak throughput of the tier
+       that served the query — the paper's unit-unification trick, which
+       makes edge time cheap and cloud time expensive.
+
+Fidelity vs deployment: the paper normalizes with FP64 GPU peaks (Table 3).
+We keep that table to reproduce the paper's arithmetic and add a TPU v5e
+table (bf16) as the deployment default (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+# Table 3 (FP64 TFLOPS) — retained for paper-faithful reproduction
+GPU_PEAK_TFLOPS_FP64: Dict[str, float] = {
+    "rtx4090": 1.29,
+    "p100": 4.70,
+    "v100": 7.80,
+    "a100": 9.70,
+    "h100": 60.00,
+}
+
+# TPU deployment table (bf16 TFLOPS per chip)
+TPU_PEAK_TFLOPS_BF16: Dict[str, float] = {
+    "v5e": 197.0,
+    "v5e_pod_slice_8": 8 * 197.0,
+}
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    """One serving tier (edge node or cloud)."""
+    name: str
+    model_params_b: float          # model size in billions
+    peak_tflops: float             # normalization peak for time cost
+    tokens_per_s: float            # generation throughput
+    prefill_tokens_per_s: float    # prompt-processing throughput
+    base_delay_s: float            # network + loading latency
+
+
+# Paper prototype: edge = RTX4090 + 3B SLM; cloud = "8xH100" + 72B LLM.
+PAPER_EDGE = TierSpec("edge-3b", 3.0, GPU_PEAK_TFLOPS_FP64["rtx4090"],
+                      tokens_per_s=90.0, prefill_tokens_per_s=7000.0,
+                      base_delay_s=0.02)
+
+# per-(retrieval, generation) retrieval-path latency: graph queries pay a
+# community-search cost (larger when the context must ship to the edge)
+RETRIEVAL_DELAY_S = {("none", "local"): 0.0, ("edge", "local"): 0.02,
+                     ("graph", "local"): 0.9, ("graph", "cloud"): 0.2}
+PAPER_CLOUD = TierSpec("cloud-72b", 72.0, 8 * GPU_PEAK_TFLOPS_FP64["h100"],
+                       tokens_per_s=280.0, prefill_tokens_per_s=24000.0,
+                       base_delay_s=0.30)
+
+# TPU deployment tiers (qwen2-0.5b .. qwen2-72b from the assigned configs)
+TPU_EDGE = TierSpec("edge-v5e", 3.0, TPU_PEAK_TFLOPS_BF16["v5e"],
+                    tokens_per_s=120.0, prefill_tokens_per_s=8000.0,
+                    base_delay_s=0.02)
+TPU_CLOUD = TierSpec("cloud-v5e-pod", 72.0, TPU_PEAK_TFLOPS_BF16["v5e_pod_slice_8"],
+                     tokens_per_s=200.0, prefill_tokens_per_s=30000.0,
+                     base_delay_s=0.30)
+
+
+def inference_tflops(model_params_b: float, in_tokens: float,
+                     out_tokens: float) -> float:
+    """~2·N FLOPs per token (Pope et al. 2023), in TFLOPs."""
+    return 2.0 * model_params_b * 1e9 * (in_tokens + out_tokens) / 1e12
+
+
+def generation_delay(tier: TierSpec, in_tokens: float, out_tokens: float,
+                     network_delay_s: float) -> float:
+    return (tier.base_delay_s + network_delay_s
+            + in_tokens / tier.prefill_tokens_per_s
+            + out_tokens / tier.tokens_per_s)
+
+
+def time_cost_tflops(tier: TierSpec, delay_s: float) -> float:
+    """The paper's unit unification: seconds x tier peak TFLOP/s."""
+    return delay_s * tier.peak_tflops
+
+
+@dataclass(frozen=True)
+class CostWeights:
+    """delta2 default 0.1 reproduces the paper's Table 4 arithmetic
+    (e.g. 72B+GraphRAG ~ 690 u_r + 0.1*(1.0s x 480 TFLOP/s) ~ 740)."""
+    delta1: float = 1.0            # resource weight
+    delta2: float = 0.1            # time weight
+
+
+def total_cost(u_r: float, u_d: float, w: CostWeights) -> float:
+    return w.delta1 * u_r + w.delta2 * u_d
+
+
+# Table 1 token statistics (mean, std) per retrieval strategy — used by the
+# workload simulator to draw realistic token counts for a 3B model.
+TABLE1_TOKENS = {
+    "llm_only": {"in": (16.01, 5.01), "out": (27.21, 14.83)},
+    "naive_rag": {"in": (3632.0, 28.95), "out": (26.59, 19.81)},
+    "graph_rag": {"in": (9017.0, 2529.0), "out": (142.7, 91.58)},
+}
+
+
+__all__ = [
+    "TierSpec", "CostWeights", "GPU_PEAK_TFLOPS_FP64", "TPU_PEAK_TFLOPS_BF16",
+    "PAPER_EDGE", "PAPER_CLOUD", "TPU_EDGE", "TPU_CLOUD",
+    "inference_tflops", "generation_delay", "time_cost_tflops", "total_cost",
+    "TABLE1_TOKENS",
+]

@@ -1,0 +1,64 @@
+"""Edge-assisted collaborative retrieval (paper §3.3 / §5, contribution C1).
+
+When the local store's coverage is insufficient, retrieval extends to *other*
+edge nodes: the query's keywords are compared against each edge's keyword
+index and the edge with the highest overlap ratio serves the retrieval.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.retrieval.embedder import content_words, embed, embed_batch
+from repro.retrieval.store import Chunk, VectorStore
+
+
+def query_keywords(query: str, vocab: Optional[Sequence[str]] = None,
+                   sim_threshold: float = 0.5) -> List[str]:
+    """Valid query keywords: content words, plus embedding-matched vocabulary
+    terms above the 50% similarity threshold (paper §5)."""
+    kws = content_words(query)
+    if vocab:
+        import numpy as np
+        missing = [w for w in vocab if w not in kws]
+        if missing and kws:
+            qe = embed(query)
+            ve = embed_batch(missing)
+            sims = ve @ qe
+            for i, s in enumerate(sims):
+                if s > sim_threshold:
+                    kws.append(missing[i])
+    return kws
+
+
+@dataclass
+class EdgeSelection:
+    edge_id: str
+    overlap: float
+    ranking: List[Tuple[str, float]]
+
+
+def select_edge(stores: Dict[str, VectorStore], query: str,
+                local_edge: Optional[str] = None) -> EdgeSelection:
+    """Pick the edge whose keyword index best covers the query (ties favor
+    the local edge to avoid inter-edge hops)."""
+    kws = query_keywords(query)
+    ranking = sorted(
+        ((eid, s.overlap_ratio(kws)) for eid, s in stores.items()),
+        key=lambda kv: (-kv[1], kv[0] != local_edge),
+    )
+    best_id, best_ov = ranking[0] if ranking else ("", 0.0)
+    return EdgeSelection(best_id, best_ov, ranking)
+
+
+def edge_assisted_search(stores: Dict[str, VectorStore], query: str,
+                         k: int = 5, local_edge: Optional[str] = None
+                         ) -> Tuple[List[Tuple[Chunk, float]], EdgeSelection]:
+    sel = select_edge(stores, query, local_edge)
+    if not sel.edge_id:
+        return [], sel
+    return stores[sel.edge_id].search(query, k), sel
+
+
+__all__ = ["query_keywords", "select_edge", "edge_assisted_search",
+           "EdgeSelection"]

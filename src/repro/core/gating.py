@@ -1,0 +1,139 @@
+"""Hierarchical collaborative gating (paper §3.3/§4, contribution C3).
+
+Context  c_t = [d_t, s_t, q_t]:
+  d_t: network delays (cloud, best-edge),
+  s_t: highest keyword-overlap ratio + which edge dataset,
+  q_t: query complexity (single/multi-hop, length, #entities).
+
+Control x_t = [r_t, g_t]: retrieval source x generation location. The paper's
+prototype evaluates four strategies; we keep the full 3x2 space definable.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.edge_assist import query_keywords
+from repro.core.safeobo import SafeOBO, SafeOBOConfig
+from repro.retrieval.embedder import content_words
+
+# ---- arms -------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Arm:
+    idx: int
+    retrieval: str     # "none" | "edge" | "graph"
+    generation: str    # "local" | "cloud"
+    name: str
+
+
+PAPER_ARMS: Tuple[Arm, ...] = (
+    Arm(0, "none", "local", "slm-only"),
+    Arm(1, "edge", "local", "edge-rag+slm"),
+    Arm(2, "graph", "local", "graphrag+slm"),
+    Arm(3, "graph", "cloud", "graphrag+llm"),
+)
+
+
+# ---- query analysis -----------------------------------------------------------
+
+_MULTIHOP_CUES = re.compile(
+    r"\b(impact|effect|influence|relationship|compare|both|because|lead to|"
+    r"result in|contribute|connection|differ|why|how does|through)\b", re.I)
+
+
+@dataclass
+class QueryContext:
+    query: str
+    d_cloud: float                 # cloud network delay (s)
+    d_edge: float                  # best-edge network delay (s)
+    overlap: float                 # highest keyword overlap ratio
+    edge_id: str                   # edge dataset achieving it
+    edge_index: int = 0
+    multihop: bool = False
+    n_tokens: int = 0
+    n_entities: int = 0
+
+    @staticmethod
+    def analyze(query: str, d_cloud: float, d_edge: float, overlap: float,
+                edge_id: str, edge_index: int = 0) -> "QueryContext":
+        toks = query.split()
+        ents = content_words(query)
+        return QueryContext(
+            query=query, d_cloud=d_cloud, d_edge=d_edge, overlap=overlap,
+            edge_id=edge_id, edge_index=edge_index,
+            multihop=bool(_MULTIHOP_CUES.search(query)) or len(ents) >= 6,
+            n_tokens=len(toks), n_entities=len(set(ents)),
+        )
+
+
+# ARD-style per-feature scales: the GP kernel is isotropic, so feature
+# scaling doubles as automatic-relevance weighting. Keyword overlap and
+# multi-hop structure are the strong accuracy predictors (they determine
+# retrieval hit probability and reasoning depth); network delays and lengths
+# are compressed so they do not dilute the safe-set evidence density.
+ARD_WEIGHTS = np.array([0.25, 0.25, 2.8, 0.25, 2.0, 0.5, 0.5], np.float32)
+
+
+def context_features(qc: QueryContext, n_edges: int = 8) -> np.ndarray:
+    """Standardized, relevance-weighted feature vector for the GPs."""
+    raw = np.array([
+        min(qc.d_cloud / 0.5, 2.0),
+        min(qc.d_edge / 0.1, 2.0),
+        qc.overlap,
+        qc.edge_index / max(n_edges - 1, 1),
+        1.0 if qc.multihop else 0.0,
+        min(qc.n_tokens / 30.0, 2.0),
+        min(qc.n_entities / 8.0, 2.0),
+    ], np.float32)
+    return raw * ARD_WEIGHTS
+
+
+CONTEXT_DIM = 7
+
+
+# ---- gate ----------------------------------------------------------------------
+
+@dataclass
+class Decision:
+    arm: Arm
+    info: dict = field(default_factory=dict)
+
+
+class CollaborativeGate:
+    """The paper's gate: SafeOBO over (context, arm)."""
+
+    def __init__(self, *, qos_min_acc: float = 0.9, qos_max_delay: float = 5.0,
+                 warmup_steps: int = 300, beta: float = 2.0, seed: int = 0,
+                 arms: Tuple[Arm, ...] = PAPER_ARMS, n_edges: int = 8,
+                 use_pallas: bool = False):
+        self.arms = arms
+        self.n_edges = n_edges
+        self.obo = SafeOBO(SafeOBOConfig(
+            n_arms=len(arms), context_dim=CONTEXT_DIM,
+            warmup_steps=warmup_steps, beta=beta,
+            qos_min_acc=qos_min_acc, qos_max_delay=qos_max_delay,
+            safe_seed_arm=len(arms) - 1, use_pallas=use_pallas,
+        ), seed=seed)
+
+    def decide(self, qc: QueryContext) -> Decision:
+        ctx = context_features(qc, self.n_edges)
+        idx, info = self.obo.select(ctx)
+        return Decision(self.arms[idx], info)
+
+    def update(self, qc: QueryContext, arm: Arm, *, cost: float,
+               accuracy: float, delay: float) -> None:
+        ctx = context_features(qc, self.n_edges)
+        self.obo.update(ctx, arm.idx, cost=cost, accuracy=accuracy,
+                        delay=delay)
+
+    @property
+    def in_warmup(self) -> bool:
+        return self.obo.in_warmup
+
+
+__all__ = ["Arm", "PAPER_ARMS", "QueryContext", "context_features",
+           "CONTEXT_DIM", "CollaborativeGate", "Decision"]

@@ -1,0 +1,125 @@
+"""Gaussian-process regression in pure JAX for the collaborative gate.
+
+Fixed-size ring buffers keep everything jit-able: unused slots are masked out
+of the kernel matrix (masked rows reduce to identity rows, so their alpha
+contribution is exactly zero). Posterior via Cholesky with jitter.
+
+The covariance matrix K(X,X) is the compute hot-spot of the gate at scale;
+``repro.kernels.rbf`` provides the Pallas TPU kernel for it (ops.rbf_matrix),
+used when ``use_pallas=True``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GPHypers:
+    lengthscale: float = 1.0
+    signal_var: float = 1.0
+    noise_var: float = 0.05
+
+
+class GPState(NamedTuple):
+    X: jax.Array          # [N, D] observation inputs (ring buffer)
+    y: jax.Array          # [N]
+    count: jax.Array      # scalar int32: total observations ever added
+
+
+def gp_init(capacity: int, dim: int) -> GPState:
+    return GPState(
+        X=jnp.zeros((capacity, dim), jnp.float32),
+        y=jnp.zeros((capacity,), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+@jax.jit
+def gp_add(state: GPState, x: jax.Array, y: jax.Array) -> GPState:
+    """FIFO-append one observation (ring overwrite when full)."""
+    idx = state.count % state.X.shape[0]
+    return GPState(
+        X=state.X.at[idx].set(x.astype(jnp.float32)),
+        y=state.y.at[idx].set(jnp.asarray(y, jnp.float32)),
+        count=state.count + 1,
+    )
+
+
+def sq_dists(X1: jax.Array, X2: jax.Array) -> jax.Array:
+    n1 = jnp.sum(X1 * X1, axis=-1, keepdims=True)
+    n2 = jnp.sum(X2 * X2, axis=-1, keepdims=True)
+    d = n1 + n2.T - 2.0 * X1 @ X2.T
+    return jnp.maximum(d, 0.0)
+
+
+def rbf(X1: jax.Array, X2: jax.Array, h: GPHypers) -> jax.Array:
+    return h.signal_var * jnp.exp(-0.5 * sq_dists(X1, X2) / (h.lengthscale ** 2))
+
+
+def _mask(state: GPState) -> jax.Array:
+    n = state.X.shape[0]
+    return (jnp.arange(n) < state.count).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def gp_posterior(state: GPState, Xq: jax.Array,
+                 lengthscale: jax.Array, signal_var: jax.Array,
+                 noise_var: jax.Array, use_pallas: bool = False
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Posterior mean/std at query points Xq [Q, D] -> ([Q], [Q])."""
+    h = GPHypers(lengthscale, signal_var, noise_var)
+    m = _mask(state)
+    if use_pallas:
+        from repro.kernels.rbf import ops as rbf_ops
+        K = rbf_ops.rbf_matrix(state.X, state.X, lengthscale, signal_var)
+        Ks = rbf_ops.rbf_matrix(state.X, Xq, lengthscale, signal_var)
+    else:
+        K = rbf(state.X, state.X, h)
+        Ks = rbf(state.X, Xq, h)
+    K = K * m[:, None] * m[None, :]
+    K = K + jnp.diag(noise_var * m + (1.0 - m) * 1.0 + 1e-6)
+    Ks = Ks * m[:, None]                          # [N, Q]
+    L = jnp.linalg.cholesky(K)
+    alpha = jax.scipy.linalg.cho_solve((L, True), state.y * m)
+    mean = Ks.T @ alpha
+    v = jax.scipy.linalg.solve_triangular(L, Ks, lower=True)
+    var = signal_var - jnp.sum(v * v, axis=0)
+    std = jnp.sqrt(jnp.maximum(var, 1e-9))
+    # prior fallback before any data
+    no_data = state.count == 0
+    mean = jnp.where(no_data, jnp.zeros_like(mean), mean)
+    std = jnp.where(no_data, jnp.full_like(std, jnp.sqrt(signal_var)), std)
+    return mean, std
+
+
+def gp_log_marginal(state: GPState, h: GPHypers) -> jax.Array:
+    """Masked log marginal likelihood (for hyperparameter grid refresh)."""
+    m = _mask(state)
+    K = rbf(state.X, state.X, h) * m[:, None] * m[None, :]
+    K = K + jnp.diag(h.noise_var * m + (1.0 - m) * 1.0 + 1e-6)
+    L = jnp.linalg.cholesky(K)
+    ym = state.y * m
+    alpha = jax.scipy.linalg.cho_solve((L, True), ym)
+    ll = -0.5 * ym @ alpha
+    ll -= jnp.sum(jnp.log(jnp.diagonal(L)) * m)   # masked slots: log(1)=0
+    ll -= 0.5 * jnp.sum(m) * jnp.log(2 * jnp.pi)
+    return ll
+
+
+def refresh_lengthscale(state: GPState, h: GPHypers,
+                        grid=(0.25, 0.5, 1.0, 2.0, 4.0)) -> GPHypers:
+    """Pick the grid lengthscale maximizing marginal likelihood."""
+    lls = jnp.stack([gp_log_marginal(state, replace(h, lengthscale=float(g)))
+                     for g in grid])
+    best = int(jnp.argmax(lls))
+    return replace(h, lengthscale=float(grid[best]))
+
+
+__all__ = ["GPHypers", "GPState", "gp_init", "gp_add", "gp_posterior",
+           "rbf", "sq_dists", "gp_log_marginal", "refresh_lengthscale"]

@@ -1,0 +1,81 @@
+"""Adaptive knowledge update (paper §5, contribution C2).
+
+The cloud accumulates recent QA traffic per edge node; every
+``update_trigger`` (=20) new QA pairs at an edge, the cloud:
+  1. extracts keywords from that edge's recent queries,
+  2. ranks GraphRAG communities by keyword/entity matches,
+  3. ships up to ``max_chunks_per_update`` (=500) chunks from the top-k
+     communities to the edge store, which applies FIFO eviction
+     (capacity 1000).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.retrieval.graph_rag import KnowledgeGraph
+from repro.retrieval.store import Chunk, VectorStore
+
+
+@dataclass
+class KnowledgeUpdateConfig:
+    update_trigger: int = 20           # new QA pairs per update (paper: 20)
+    max_chunks_per_update: int = 500   # paper: up to 500
+    top_k_communities: int = 3
+    recent_window: int = 60            # queries considered for relevance
+
+
+@dataclass
+class UpdateStats:
+    updates: int = 0
+    chunks_shipped: int = 0
+    chunks_evicted: int = 0
+
+
+class AdaptiveKnowledgeUpdater:
+    """Cloud-side component driving per-edge knowledge refresh."""
+
+    def __init__(self, graph: KnowledgeGraph,
+                 cfg: Optional[KnowledgeUpdateConfig] = None):
+        self.graph = graph
+        self.cfg = cfg or KnowledgeUpdateConfig()
+        self._pending: Dict[str, List[str]] = {}
+        self._recent: Dict[str, List[str]] = {}
+        self.stats: Dict[str, UpdateStats] = {}
+
+    def observe_query(self, edge_id: str, query: str,
+                      store: VectorStore, now: float = 0.0) -> bool:
+        """Record one served QA pair; trigger an update when due.
+        Returns True if an update was shipped."""
+        self._pending.setdefault(edge_id, []).append(query)
+        rec = self._recent.setdefault(edge_id, [])
+        rec.append(query)
+        if len(rec) > self.cfg.recent_window:
+            del rec[: len(rec) - self.cfg.recent_window]
+        if len(self._pending[edge_id]) < self.cfg.update_trigger:
+            return False
+        self._pending[edge_id] = []
+        self.push_update(edge_id, store, now)
+        return True
+
+    def push_update(self, edge_id: str, store: VectorStore,
+                    now: float = 0.0) -> int:
+        """Ship community chunks relevant to the edge's recent queries."""
+        queries = self._recent.get(edge_id, [])
+        if not queries:
+            return 0
+        chunks = self.graph.community_chunks_for_queries(
+            queries, self.cfg.top_k_communities,
+            self.cfg.max_chunks_per_update)
+        existing = {c.text for c in store.chunks}
+        fresh = [Chunk(c.text, c.keywords, c.source, c.topic, now)
+                 for c in chunks if c.text not in existing]
+        evicted = store.add(fresh)
+        st = self.stats.setdefault(edge_id, UpdateStats())
+        st.updates += 1
+        st.chunks_shipped += len(fresh)
+        st.chunks_evicted += evicted
+        return len(fresh)
+
+
+__all__ = ["AdaptiveKnowledgeUpdater", "KnowledgeUpdateConfig", "UpdateStats"]

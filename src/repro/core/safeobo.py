@@ -1,0 +1,126 @@
+"""Safe Online Bayesian Optimization — Algorithm 1 of the paper.
+
+Three GP families model cost (i=0), accuracy (i=1) and delay (i=2) over the
+(context, arm) space. Since arms are categorical, the joint GP over
+(context, one-hot(arm)) factorizes into one GP per (objective, arm) — an
+exact reparameterization that also makes the observation ring buffers
+per-arm, so exploitation traffic on one arm can never evict another arm's
+warmup evidence (a failure mode we hit with a single shared buffer).
+
+Warm-up phase: uniform-random arms. Exploitation:
+  safe set S_t = S_0 ∪ {x : μ1-βσ1 ≥ QoS_acc ∧ μ2+βσ2 ≤ QoS_delay}
+  x_t = argmin_{x∈S_t} μ0 - β σ0           (LCB on cost)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gp import (
+    GPHypers, GPState, gp_add, gp_init, gp_posterior, refresh_lengthscale,
+)
+
+
+@dataclass
+class SafeOBOConfig:
+    n_arms: int = 4
+    context_dim: int = 6
+    capacity: int = 256            # GP observation window PER ARM
+    warmup_steps: int = 300        # T0
+    beta: float = 2.0              # acquisition LCB exploration
+    beta_safe: float = 1.0         # safety confidence bound
+    qos_min_acc: float = 0.9
+    qos_max_delay: float = 5.0
+    safe_seed_arm: int = 3         # cloud GraphRAG + cloud LLM (always safe)
+    cost_scale: float = 500.0      # normalize cost obs into O(1)
+    hyper_refresh_every: int = 64
+    use_pallas: bool = False
+
+
+class SafeOBO:
+    """Host-side driver; posteriors/updates are jit'd JAX."""
+
+    N_OBJ = 3  # cost, accuracy, delay
+
+    def __init__(self, cfg: SafeOBOConfig, seed: int = 0):
+        self.cfg = cfg
+        self.gps: List[List[GPState]] = [
+            [gp_init(cfg.capacity, cfg.context_dim)
+             for _ in range(cfg.n_arms)]
+            for _ in range(self.N_OBJ)
+        ]
+        # per-objective noise: accuracy observations are Bernoulli draws.
+        # The accuracy GP's hypers are FIXED: marginal-likelihood refresh on
+        # 0/1 targets collapses the lengthscale (overfits the noise), which
+        # destroys safe-set generalization.
+        self.hypers = [
+            GPHypers(lengthscale=1.0, signal_var=1.0, noise_var=0.05),   # cost
+            GPHypers(lengthscale=2.0, signal_var=1.0, noise_var=0.05),   # acc
+            GPHypers(lengthscale=1.0, signal_var=1.0, noise_var=0.05),   # delay
+        ]
+        self.t = 0
+        self.rng = np.random.default_rng(seed)
+
+    # ---- Algorithm 1, lines 4-5 / 14-19 -------------------------------------
+    def posteriors(self, ctx: np.ndarray) -> np.ndarray:
+        """[N_OBJ, n_arms, 2] (mu, sigma) at this context."""
+        cfg = self.cfg
+        Xq = jnp.asarray(ctx, jnp.float32)[None]
+        out = np.zeros((self.N_OBJ, cfg.n_arms, 2), np.float32)
+        for i in range(self.N_OBJ):
+            h = self.hypers[i]
+            for a in range(cfg.n_arms):
+                mu, sd = gp_posterior(self.gps[i][a], Xq, h.lengthscale,
+                                      h.signal_var, h.noise_var,
+                                      use_pallas=cfg.use_pallas)
+                out[i, a] = (float(mu[0]), float(sd[0]))
+        return out
+
+    def select(self, ctx: np.ndarray) -> Tuple[int, dict]:
+        cfg = self.cfg
+        if self.t < cfg.warmup_steps:
+            arm = int(self.rng.integers(cfg.n_arms))
+            return arm, {"phase": "warmup", "safe": list(range(cfg.n_arms))}
+        p = self.posteriors(ctx)
+        mu0, sd0 = p[0, :, 0], p[0, :, 1]
+        mu1, sd1 = p[1, :, 0], p[1, :, 1]
+        mu2, sd2 = p[2, :, 0], p[2, :, 1]
+        safe = ((mu1 - cfg.beta_safe * sd1 >= cfg.qos_min_acc)
+                & (mu2 + cfg.beta_safe * sd2 <= cfg.qos_max_delay))
+        safe[cfg.safe_seed_arm] = True            # S_0 seed
+        lcb = mu0 - cfg.beta * sd0
+        lcb_masked = np.where(safe, lcb, np.inf)
+        arm = int(np.argmin(lcb_masked))
+        return arm, {
+            "phase": "exploit", "safe": np.flatnonzero(safe).tolist(),
+            "mu_cost": mu0.tolist(), "sd_cost": sd0.tolist(),
+            "mu_acc": mu1.tolist(), "sd_acc": sd1.tolist(),
+            "mu_delay": mu2.tolist(),
+        }
+
+    # ---- Algorithm 1, lines 6-11 / 20-25 ------------------------------------
+    def update(self, ctx: np.ndarray, arm: int, *, cost: float,
+               accuracy: float, delay: float) -> None:
+        cfg = self.cfg
+        x = jnp.asarray(ctx, jnp.float32)
+        ys = (cost / cfg.cost_scale, accuracy, delay)
+        for i in range(self.N_OBJ):
+            self.gps[i][arm] = gp_add(self.gps[i][arm], x, ys[i])
+        self.t += 1
+        if (self.t % cfg.hyper_refresh_every == 0
+                and self.t >= cfg.warmup_steps // 2):
+            for i in (0, 2):       # cost & delay only; accuracy stays fixed
+                self.hypers[i] = refresh_lengthscale(
+                    self.gps[i][self.t % cfg.n_arms], self.hypers[i],
+                    grid=(0.75, 1.0, 1.5, 2.5, 4.0))
+
+    @property
+    def in_warmup(self) -> bool:
+        return self.t < self.cfg.warmup_steps
+
+
+__all__ = ["SafeOBO", "SafeOBOConfig"]

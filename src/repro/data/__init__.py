@@ -1,0 +1,6 @@
+from repro.data.corpus import Corpus, Fact, QAPair, generate_corpus, specialized_like, wiki_like
+from repro.data.pipeline import PackedLMDataset
+from repro.data.tokenizer import ByteTokenizer, VOCAB
+
+__all__ = ["Corpus", "Fact", "QAPair", "generate_corpus", "wiki_like",
+           "specialized_like", "PackedLMDataset", "ByteTokenizer", "VOCAB"]

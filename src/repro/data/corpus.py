@@ -1,0 +1,146 @@
+"""Synthetic corpora with controlled entity structure, regional skew and
+temporal drift (DESIGN.md §9.4 — reproducible stand-ins for the paper's
+Wiki QA and Harry Potter QA datasets).
+
+A corpus is a set of *topics* (one per region-affinity group), each with
+entities carrying attribute facts. Articles (chunks) verbalize facts; QA
+pairs ask for them (single-hop) or chain through a relation (multi-hop).
+Facts can be *versioned over time* — the adaptive-update experiments flip
+fact values at given timestamps, so stale edge stores answer incorrectly.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.retrieval.store import Chunk, make_chunk
+
+_ADJ = ["amber", "crimson", "cobalt", "ivory", "obsidian", "emerald",
+        "saffron", "violet", "umber", "teal", "coral", "slate"]
+_NOUN = ["falcon", "harbor", "summit", "meadow", "lantern", "orchard",
+         "citadel", "glacier", "prairie", "bazaar", "archive", "foundry"]
+_ATTRS = ["founder", "capital", "signature dish", "anthem", "festival",
+          "guardian", "export", "monument", "motto", "rival"]
+_REL = ["ally", "neighbor", "parent guild", "sister city"]
+
+
+@dataclass
+class Fact:
+    entity: str
+    attr: str
+    value: str
+    since: float = 0.0            # becomes true at this time (versioning)
+    topic: str = ""
+
+
+@dataclass
+class QAPair:
+    question: str
+    answer: str
+    topic: str
+    multihop: bool = False
+    asks_at: float = 0.0
+
+
+@dataclass
+class Corpus:
+    name: str
+    topics: List[str]
+    facts: List[Fact]
+    chunks: List[Chunk]
+    qa: List[QAPair]
+    relations: Dict[str, str] = field(default_factory=dict)
+
+    def chunks_for_topic(self, topic: str) -> List[Chunk]:
+        return [c for c in self.chunks if c.topic == topic]
+
+    def gold_answer(self, q: QAPair, at_time: float = 0.0) -> str:
+        return q.answer
+
+
+def _name(rng: random.Random) -> str:
+    return f"{rng.choice(_ADJ)} {rng.choice(_NOUN)}"
+
+
+def generate_corpus(name: str = "wiki", n_topics: int = 8,
+                    entities_per_topic: int = 14, attrs_per_entity: int = 6,
+                    multihop_frac: float = 0.3, versioned_frac: float = 0.15,
+                    horizon: float = 1000.0, seed: int = 0) -> Corpus:
+    rng = random.Random(seed)
+    topics = [f"{name}-topic-{i}" for i in range(n_topics)]
+    facts: List[Fact] = []
+    chunks: List[Chunk] = []
+    qa: List[QAPair] = []
+    relations: Dict[str, str] = {}
+    entities_by_topic: Dict[str, List[str]] = {}
+
+    for ti, topic in enumerate(topics):
+        ents = []
+        for _ in range(entities_per_topic):
+            # entity names carry a topic-specific token so that keyword
+            # overlap can actually discriminate edge datasets
+            e = f"{_name(rng)} of {name}{ti}x{rng.randint(10, 99)}"
+            ents.append(e)
+        entities_by_topic[topic] = ents
+        for e in ents:
+            attrs = rng.sample(_ATTRS, attrs_per_entity)
+            rel_target = rng.choice([x for x in ents if x != e])
+            relations[e] = rel_target
+            rel_name = rng.choice(_REL)
+            sentences = [f"{e} is a notable subject of {topic}."]
+            sentences.append(f"The {rel_name} of {e} is {rel_target}.")
+            for a in attrs:
+                v = f"{_name(rng)} {rng.randint(100, 999)}"
+                since = 0.0
+                if rng.random() < versioned_frac:
+                    since = rng.uniform(0.3, 0.8) * horizon
+                facts.append(Fact(e, a, v, since, topic))
+                when = "" if since == 0 else f" (since update at t={since:.0f})"
+                sentences.append(f"The {a} of {e} is {v}{when}.")
+            text = " ".join(sentences)
+            chunks.append(make_chunk(text, source=topic, topic=topic))
+
+    # single-hop QA
+    for f in facts:
+        q = f"What is the {f.attr} of {f.entity}?"
+        qa.append(QAPair(q, f.value, f.topic, False,
+                         asks_at=max(f.since, 0.0)))
+    # multi-hop QA: attr of the relation target
+    n_multi = int(len(qa) * multihop_frac)
+    fact_by_ent: Dict[str, List[Fact]] = {}
+    for f in facts:
+        fact_by_ent.setdefault(f.entity, []).append(f)
+    ents_all = list(relations)
+    rng.shuffle(ents_all)
+    for e in ents_all[:n_multi]:
+        tgt = relations[e]
+        tfs = fact_by_ent.get(tgt)
+        if not tfs:
+            continue
+        f = rng.choice(tfs)
+        q = (f"What is the {f.attr} of the entity related to {e}, and what "
+             f"impact does this connection have?")
+        qa.append(QAPair(q, f.value, f.topic, True, asks_at=f.since))
+
+    rng.shuffle(qa)
+    return Corpus(name, topics, facts, chunks, qa, relations)
+
+
+def wiki_like(seed: int = 0) -> Corpus:
+    """General-domain stand-in (paper: 139 Wikipedia pages, 571 QA)."""
+    return generate_corpus("wiki", n_topics=8, entities_per_topic=14,
+                           attrs_per_entity=5, multihop_frac=0.25, seed=seed)
+
+
+def specialized_like(seed: int = 1) -> Corpus:
+    """Specialized-domain stand-in (paper: Harry Potter books, 1180 QA) —
+    fewer topics, denser relations, more multi-hop."""
+    return generate_corpus("hp", n_topics=4, entities_per_topic=20,
+                           attrs_per_entity=7, multihop_frac=0.45,
+                           versioned_frac=0.05, seed=seed)
+
+
+__all__ = ["Corpus", "Fact", "QAPair", "generate_corpus", "wiki_like",
+           "specialized_like"]

@@ -1,0 +1,46 @@
+"""Training data pipeline: deterministic shuffled batches of packed token
+sequences from a corpus (used by the end-to-end training example)."""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.data.corpus import Corpus
+from repro.data.tokenizer import ByteTokenizer
+
+
+class PackedLMDataset:
+    """Concatenate corpus chunk texts into one token stream, serve
+    (tokens, targets) windows with epoch shuffling."""
+
+    def __init__(self, corpus: Corpus, seq_len: int, batch: int,
+                 seed: int = 0, vocab_cap: Optional[int] = None):
+        tok = ByteTokenizer()
+        ids = []
+        for c in corpus.chunks:
+            ids.extend(tok.encode(c.text, bos=True, eos=True))
+        stream = np.array(ids, np.int32)
+        if vocab_cap:
+            stream = stream % vocab_cap
+        n_win = (len(stream) - 1) // seq_len
+        self.windows = np.stack([
+            stream[i * seq_len : i * seq_len + seq_len + 1]
+            for i in range(n_win)
+        ])
+        self.seq_len = seq_len
+        self.batch = batch
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        while True:
+            order = self.rng.permutation(len(self.windows))
+            for i in range(0, len(order) - self.batch + 1, self.batch):
+                w = self.windows[order[i : i + self.batch]]
+                yield w[:, :-1], w[:, 1:]
+
+    def n_batches_per_epoch(self) -> int:
+        return len(self.windows) // self.batch
+
+
+__all__ = ["PackedLMDataset"]

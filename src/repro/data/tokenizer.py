@@ -1,0 +1,45 @@
+"""Byte-level tokenizer (vocab = 256 bytes + specials). Used by the real
+serving engine and the training example; reduced-arch vocabs (>=1024) always
+cover it."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+PAD, BOS, EOS = 256, 257, 258
+N_SPECIAL = 3
+VOCAB = 256 + N_SPECIAL
+
+
+class ByteTokenizer:
+    vocab_size = VOCAB
+    pad_id, bos_id, eos_id = PAD, BOS, EOS
+
+    def encode(self, text: str, bos: bool = True, eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8", errors="replace"))
+        if bos:
+            ids = [BOS] + ids
+        if eos:
+            ids = ids + [EOS]
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:
+        bs = bytes(i for i in ids if 0 <= i < 256)
+        return bs.decode("utf-8", errors="replace")
+
+    def pad_batch(self, seqs: Sequence[Sequence[int]], length: int = 0):
+        """Left-align, pad right. Returns (tokens [B,L], lengths [B])."""
+        if not length:
+            length = max(len(s) for s in seqs)
+        B = len(seqs)
+        out = np.full((B, length), PAD, np.int32)
+        lens = np.zeros(B, np.int32)
+        for i, s in enumerate(seqs):
+            s = list(s)[:length]
+            out[i, : len(s)] = s
+            lens[i] = len(s)
+        return out, lens
+
+
+__all__ = ["ByteTokenizer", "VOCAB", "PAD", "BOS", "EOS"]

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the serving hot loops. Each kernel package has
+kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper; interpret
+mode off-TPU) and ref.py (pure-jnp oracle used by the allclose sweeps)."""

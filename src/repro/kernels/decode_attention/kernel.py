@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: fused GQA flash-decode attention.
+
+One new query token per sequence attends to a [S, KV, hd] KV cache with an
+online-softmax accumulation over sequence blocks — the serving hot loop.
+
+TPU adaptation (vs a CUDA warp-per-row decode kernel): the grid iterates
+(batch, kv_head, seq_block); each program instance processes a whole
+[BS, hd] cache tile from VMEM against the [G, hd] query group on the MXU,
+with running max / sum-exp / weighted-value accumulators in VMEM scratch.
+hd is kept at a 128-lane multiple and BS at a multiple of 8 for the VPU/MXU
+layout. Masking uses the per-row valid length (ring-buffer caches pass
+length=min(len, S) with order-independent softmax).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, block_s: int, scale: float):
+    """Grid: (B, KV, S//block_s) — S is the innermost (sequential) axis.
+
+    q_ref:   [G, hd]      (this batch row, this kv head's query group)
+    k_ref:   [block_s, hd]
+    v_ref:   [block_s, hd]
+    len_ref: [1]          (valid cache length for this row)
+    o_ref:   [G, hd]
+    scratch: m_ref [G, 1], l_ref [G, 1], acc_ref [G, hd]  (f32)
+    """
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)                    # [G, hd]
+    k = k_ref[...].astype(jnp.float32)                    # [BS, hd]
+    v = v_ref[...].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # mask positions beyond the valid length
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                # [G, BS]
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(q, k_cache, v_cache, lengths, *,
+                            block_s: int = 256, interpret: bool = True):
+    """q [B,H,hd]; k_cache/v_cache [B,S,KV,hd]; lengths [B] -> [B,H,hd]."""
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    block_s = min(block_s, S)
+    while S % block_s:
+        block_s -= 1
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(B, KV, G, hd)
+    lengths = lengths.astype(jnp.int32)
+
+    grid = (B, KV, S // block_s)
+    kernel = functools.partial(_decode_attn_kernel, block_s=block_s,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (b,)),                      # len
+            pl.BlockSpec((None, None, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((None, block_s, None, hd),
+                         lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((None, block_s, None, hd),
+                         lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, hd),
+                               lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),       # running max
+            pltpu.VMEM((G, 1), jnp.float32),       # running sum-exp
+            pltpu.VMEM((G, hd), jnp.float32),      # running weighted values
+        ],
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out.reshape(B, H, hd)

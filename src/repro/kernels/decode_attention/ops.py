@@ -1,0 +1,21 @@
+"""jit'd public wrapper: Pallas on TPU, interpret-mode elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 256):
+    """Fused GQA flash-decode. q [B,H,hd]; caches [B,S,KV,hd]; lengths [B]."""
+    return decode_attention_pallas(q, k_cache, v_cache, lengths,
+                                   block_s=block_s,
+                                   interpret=not _on_tpu())
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

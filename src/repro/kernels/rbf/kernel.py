@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: RBF covariance matrix for the gate's GPs.
+
+K[i,j] = sv * exp(-0.5 * ||x1_i - x2_j||^2 / l^2), tiled (BM x BN) with the
+cross-term on the MXU (||a-b||^2 = |a|^2 + |b|^2 - 2ab). Hyperparameters
+arrive as a (1,2) scalar operand [lengthscale, signal_var] so re-tuning does
+not retrace.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rbf_kernel(h_ref, x1_ref, x2_ref, o_ref):
+    x1 = x1_ref[...].astype(jnp.float32)                 # [BM, D]
+    x2 = x2_ref[...].astype(jnp.float32)                 # [BN, D]
+    ls = h_ref[0, 0]
+    sv = h_ref[0, 1]
+    n1 = jnp.sum(x1 * x1, axis=1, keepdims=True)         # [BM,1]
+    n2 = jnp.sum(x2 * x2, axis=1, keepdims=True)         # [BN,1]
+    cross = jax.lax.dot_general(x1, x2, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(n1 + n2.T - 2.0 * cross, 0.0)
+    o_ref[...] = (sv * jnp.exp(-0.5 * d2 / (ls * ls))).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def rbf_matrix_pallas(x1, x2, lengthscale, signal_var, *,
+                      block_m: int = 128, block_n: int = 128,
+                      interpret: bool = True):
+    """x1 [M, D], x2 [N, D] -> K [M, N] (f32)."""
+    M, D = x1.shape
+    N = x2.shape[0]
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    pm = (-M) % bm
+    pn = (-N) % bn
+    if pm:
+        x1 = jnp.pad(x1, ((0, pm), (0, 0)))
+    if pn:
+        x2 = jnp.pad(x2, ((0, pn), (0, 0)))
+    h = jnp.stack([jnp.asarray(lengthscale, jnp.float32),
+                   jnp.asarray(signal_var, jnp.float32)])[None]
+
+    out = pl.pallas_call(
+        _rbf_kernel,
+        grid=(x1.shape[0] // bm, x2.shape[0] // bn),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x1.shape[0], x2.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(h, x1, x2)
+    return out[:M, :N]

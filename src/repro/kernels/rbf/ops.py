@@ -1,0 +1,15 @@
+"""jit'd public wrapper for the RBF covariance kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rbf.kernel import rbf_matrix_pallas
+from repro.kernels.rbf.ref import rbf_matrix_ref
+
+
+def rbf_matrix(x1, x2, lengthscale, signal_var):
+    return rbf_matrix_pallas(x1, x2, lengthscale, signal_var,
+                             interpret=jax.default_backend() != "tpu")
+
+
+__all__ = ["rbf_matrix", "rbf_matrix_ref"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the RBF covariance kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_matrix_ref(x1, x2, lengthscale, signal_var):
+    x1 = x1.astype(jnp.float32)
+    x2 = x2.astype(jnp.float32)
+    n1 = jnp.sum(x1 * x1, axis=1, keepdims=True)
+    n2 = jnp.sum(x2 * x2, axis=1, keepdims=True)
+    d2 = jnp.maximum(n1 + n2.T - 2.0 * x1 @ x2.T, 0.0)
+    return signal_var * jnp.exp(-0.5 * d2 / (lengthscale ** 2))

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused retrieval scoring + blockwise top-k merge.
+
+The RAG hot loop: score = E @ q over the chunk-embedding matrix, keeping the
+running top-k. On GPU this is typically a shared-memory heap reduction; the
+TPU formulation streams [BN, D] embedding tiles through the MXU against the
+query vector and merges each tile's scores into a VMEM top-k scratch with k
+iterative masked-max passes (k is small; sort-free and VPU-friendly).
+Rows beyond ``n_valid`` (capacity padding) are masked to -inf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _topk_kernel(nvalid_ref, emb_ref, q_ref, vals_ref, idx_ref,
+                 cand_v_ref, cand_i_ref, *, block_n: int, k: int):
+    """Grid: (N // block_n,). emb_ref [BN, D], q_ref [1, D].
+    Outputs vals_ref [1, k], idx_ref [1, k].
+    Scratch: cand_v/cand_i [1, BN + k] merge buffers."""
+    i = pl.program_id(0)
+    n_blocks = pl.num_programs(0)
+
+    emb = emb_ref[...].astype(jnp.float32)               # [BN, D]
+    q = q_ref[...].astype(jnp.float32)                   # [1, D]
+    scores = jax.lax.dot_general(
+        emb, q, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]        # [BN]
+    rows = i * block_n + jax.lax.iota(jnp.int32, block_n)
+    scores = jnp.where(rows < nvalid_ref[0], scores, NEG_INF)
+
+    @pl.when(i == 0)
+    def _init():
+        cand_v_ref[...] = jnp.full_like(cand_v_ref, NEG_INF)
+        cand_i_ref[...] = jnp.zeros_like(cand_i_ref)
+
+    # merge buffer: [previous top-k | this block's scores]
+    cand_v_ref[0, k:] = scores
+    cand_i_ref[0, k:] = rows
+
+    # k iterative masked-max passes extract the new top-k in order
+    cv = cand_v_ref[0, :]
+    ci = cand_i_ref[0, :]
+    new_v = jnp.full((k,), NEG_INF, jnp.float32)
+    new_i = jnp.zeros((k,), jnp.int32)
+    for j in range(k):
+        m = jnp.max(cv)
+        am = jnp.argmax(cv)
+        new_v = new_v.at[j].set(m)
+        new_i = new_i.at[j].set(ci[am])
+        cv = cv.at[am].set(NEG_INF)
+    cand_v_ref[0, :k] = new_v
+    cand_i_ref[0, :k] = new_i
+
+    @pl.when(i == n_blocks - 1)
+    def _done():
+        vals_ref[0, :] = cand_v_ref[0, :k]
+        idx_ref[0, :] = cand_i_ref[0, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def retrieval_topk_pallas(emb, q, k: int = 5, *, block_n: int = 512,
+                          n_valid=None, interpret: bool = True):
+    """emb [N, D] (rows may be padding), q [D] -> (vals [k], idx [k])."""
+    N, D = emb.shape
+    if n_valid is None:
+        n_valid = N
+    n_valid = jnp.asarray([n_valid], jnp.int32)
+    # pad N to a block multiple
+    block_n = min(block_n, max(N, 8))
+    pad = (-N) % block_n
+    if pad:
+        emb = jnp.pad(emb, ((0, pad), (0, 0)))
+    Np = emb.shape[0]
+
+    kernel = functools.partial(_topk_kernel, block_n=block_n, k=k)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, block_n + k), jnp.float32),
+            pltpu.VMEM((1, block_n + k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(n_valid, emb, q[None])
+    return vals[0], idx[0]

@@ -1,0 +1,15 @@
+"""jit'd public wrapper for fused retrieval top-k."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.retrieval_topk.kernel import retrieval_topk_pallas
+from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
+
+
+def retrieval_topk(emb, q, k: int = 5, *, n_valid=None, block_n: int = 512):
+    return retrieval_topk_pallas(emb, q, k, block_n=block_n, n_valid=n_valid,
+                                 interpret=jax.default_backend() != "tpu")
+
+
+__all__ = ["retrieval_topk", "retrieval_topk_ref"]

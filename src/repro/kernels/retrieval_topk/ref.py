@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for retrieval top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def retrieval_topk_ref(emb, q, k: int = 5, n_valid=None):
+    N = emb.shape[0]
+    scores = (emb.astype(jnp.float32) @ q.astype(jnp.float32))
+    if n_valid is not None:
+        scores = jnp.where(jnp.arange(N) < n_valid, scores, -1e30)
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,60 @@
+"""Production meshes and sharding rules.
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import InputShape
+from repro.models.pdefs import DEFAULT_RULES
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> Mesh:
+    """1-device mesh for tests/examples on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def rules_for(shape: Optional[InputShape] = None, variant: str = "base"):
+    """Sharding rules per input shape.
+
+    long_500k (global_batch=1) cannot use batch parallelism, so the decode KV
+    cache is *sequence-sharded* over the data axis (context parallelism —
+    XLA SPMD partitions the attention contraction and inserts the softmax
+    all-reduce).
+    """
+    rules = dict(DEFAULT_RULES)
+    if shape is not None and shape.name == "long_500k":
+        rules["cache_seq"] = ("data",)
+        rules["frames"] = ("data",)
+    if "seqcache" in variant.split("+"):
+        # §Perf variant: decode KV caches sequence-sharded over the model
+        # axis — for archs whose kv_heads don't divide the model axis the
+        # cache is otherwise fully replicated there (16x memory).
+        rules["cache_seq"] = ("model",)
+        rules["kv_heads"] = ()
+    return rules
+
+
+# TPU v5e hardware constants (per chip) — roofline denominators
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link (intra-pod)
+DCN_BW = 25e9                   # B/s (across pods)
+HBM_PER_CHIP = 16e9             # bytes
+
+
+__all__ = [
+    "make_production_mesh", "make_local_mesh", "rules_for",
+    "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW", "DCN_BW", "HBM_PER_CHIP",
+]

@@ -1,0 +1,85 @@
+"""Render the §Dry-run / §Roofline markdown tables from cached dry-run JSONs.
+
+  PYTHONPATH=src python -m repro.launch.report [--mesh 16x16] [--variant base]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+ARCH_ORDER = [
+    "llama-3.2-vision-11b", "deepseek-v2-lite-16b", "whisper-base",
+    "qwen1.5-32b", "qwen2-0.5b", "zamba2-2.7b", "rwkv6-3b", "gemma3-4b",
+    "olmoe-1b-7b", "qwen2-72b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_t(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(mesh: str, variant: str = "base"):
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            tag = f"{arch}__{shape}__{mesh}"
+            if variant != "base":
+                tag += f"__{variant}"
+            p = RESULTS / f"{tag}.json"
+            if not p.exists():
+                continue
+            rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def roofline_table(mesh: str, variant: str = "base") -> str:
+    rows = load(mesh, variant)
+    out = ["| arch | shape | dominant | t_comp | t_mem | t_coll (ici/dcn) | "
+           "useful | MFU@bound | mem/dev | compile |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r.get('arch','?')} | {r.get('shape','?')} | "
+                       f"SKIP: {r['reason'][:50]} | | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r.get('arch','?')} | {r.get('shape','?')} | "
+                       f"ERROR | | | | | | | |")
+            continue
+        rl = r["roofline"]
+        mem = rl.get("per_device_peak_memory", -1)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{rl['dominant']}** "
+            f"| {fmt_t(rl['t_compute'])} | {fmt_t(rl['t_memory'])} "
+            f"| {fmt_t(rl['t_ici'])}/{fmt_t(rl['t_dcn'])} "
+            f"| {rl['useful_ratio']:.3f} | {rl['mfu_bound']*100:.1f}% "
+            f"| {fmt_b(mem) if mem > 0 else 'n/a'} "
+            f"| {r['compile_s']}s |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--variant", default="base")
+    args = ap.parse_args()
+    print(roofline_table(args.mesh, args.variant))
+
+
+if __name__ == "__main__":
+    main()

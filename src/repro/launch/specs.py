@@ -1,0 +1,73 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input — weak-type
+correct, shardable, no device allocation. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.api import Model, build_model
+from repro.models.pdefs import (
+    ParamDef, abstract_from_defs, pspecs_from_defs, resolve_axes,
+)
+from repro.training.optimizer import adamw_init
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def token_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract data inputs for a given input shape."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["targets"] = _sds((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:  # decode: ONE new token against a seq_len cache
+        out["tokens1"] = _sds((B, 1), jnp.int32)
+        out["positions"] = _sds((B,), jnp.int32)
+    if cfg.family in ("vlm", "encdec") and shape.kind != "decode":
+        n_mem = cfg.n_image_tokens if cfg.family == "vlm" else cfg.n_frames
+        out["memory"] = _sds((B, n_mem, cfg.d_model), cfg.activation_dtype)
+    return out
+
+
+def token_pspecs(cfg: ModelConfig, shape: InputShape, mesh: Mesh, rules):
+    B = shape.global_batch
+    batch_spec = resolve_axes(("batch",), (B,), mesh, rules)
+    bs = batch_spec[0] if len(batch_spec) else None
+    out = {}
+    if shape.kind == "train":
+        out["tokens"] = PartitionSpec(bs, None)
+        out["targets"] = PartitionSpec(bs, None)
+    elif shape.kind == "prefill":
+        out["tokens"] = PartitionSpec(bs, None)
+    else:
+        out["tokens1"] = PartitionSpec(bs, None)
+        out["positions"] = PartitionSpec(bs)
+    if "memory" in token_specs(cfg, shape):
+        out["memory"] = PartitionSpec(bs, None, None)
+    return out
+
+
+def abstract_state(model: Model, shape: InputShape, with_opt: bool):
+    """Abstract params (+ optimizer state for train, + cache for decode)."""
+    params = model.abstract_params()
+    out = {"params": params}
+    if with_opt:
+        out["opt_state"] = jax.eval_shape(adamw_init, params)
+    if shape.kind == "decode":
+        cd = model.cache_defs(shape.global_batch)
+        out["cache"] = abstract_from_defs(cd)
+        out["cache_defs"] = cd
+    return out
+
+
+__all__ = ["token_specs", "token_pspecs", "abstract_state"]

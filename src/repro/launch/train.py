@@ -1,0 +1,90 @@
+"""Distributed training launcher.
+
+On real hardware this runs the pjit train step over the production mesh;
+on this CPU container use --mesh local (1 device) with a reduced arch, or
+--mesh pod/multipod purely to lower+compile (the dry-run path with real
+data shapes).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import get_config
+from repro.data.corpus import wiki_like
+from repro.data.pipeline import PackedLMDataset
+from repro.launch.mesh import make_local_mesh, make_production_mesh, rules_for
+from repro.models import build_model
+from repro.models.pdefs import pspecs_from_defs
+from repro.models.shardctx import activation_sharding
+from repro.training.checkpointing import save_checkpoint
+from repro.training.optimizer import AdamWConfig
+from repro.training.steps import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", default="local", choices=["local", "pod", "multipod"])
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg, max_seq=args.seq)
+    print(f"arch={cfg.arch_id} reduced={args.reduced} "
+          f"params={model.n_params():,}")
+
+    if args.mesh == "local":
+        mesh = make_local_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    rules = rules_for(None)
+    p_specs = pspecs_from_defs(model.param_defs(), mesh, rules)
+    named = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    opt_specs = {"mu": p_specs, "nu": p_specs, "step": PartitionSpec()}
+    batch_sharding = NamedSharding(mesh, PartitionSpec(
+        "data" if args.batch % mesh.shape.get("data", 1) == 0 else None))
+
+    ds = PackedLMDataset(wiki_like(0), seq_len=args.seq, batch=args.batch,
+                         vocab_cap=cfg.vocab)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps)
+
+    with mesh, activation_sharding(mesh, rules):
+        step_fn = jax.jit(
+            make_train_step(model, opt_cfg),
+            in_shardings=(named(p_specs), named(opt_specs), None),
+        )
+        params, opt_state = init_train_state(model, jax.random.PRNGKey(0))
+        it = iter(ds)
+        for step in range(args.steps):
+            x, y = next(it)
+            batch = {"tokens": jnp.asarray(x), "targets": jnp.asarray(y)}
+            t0 = time.time()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            print(f"step {step:4d} loss={loss:8.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"({time.time()-t0:.2f}s)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, opt_state,
+                        meta={"arch": cfg.arch_id, "steps": args.steps})
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.models.api import Model, build_model, chunked_cross_entropy
+from repro.models.pdefs import (
+    ParamDef, abstract_from_defs, count_params, init_from_defs,
+    pspecs_from_defs, shardings_from_defs,
+)
+from repro.models.shardctx import activation_sharding, constrain
+
+__all__ = [
+    "Model", "build_model", "chunked_cross_entropy", "ParamDef",
+    "abstract_from_defs", "count_params", "init_from_defs",
+    "pspecs_from_defs", "shardings_from_defs", "activation_sharding",
+    "constrain",
+]

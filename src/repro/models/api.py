@@ -1,0 +1,329 @@
+"""Unified model API.
+
+``build_model(cfg, max_seq)`` returns a :class:`Model` exposing:
+  param_defs / cache_defs / extra_input_defs   (declarative; dry-run friendly)
+  init(key) -> params
+  train_loss(params, batch) -> (loss, metrics)
+  prefill(params, tokens, extras) -> (last_logits, cache)
+  decode_step(params, cache, tokens1, positions) -> (logits, cache)
+
+max_seq parameterizes cache sizes and long-context adaptations (e.g. the
+zamba2 shared-attention block switches to a sliding window beyond 64k; see
+DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import families as F
+from repro.models.pdefs import (
+    ParamDef, abstract_from_defs, count_params, init_from_defs, stack,
+)
+from repro.models.shardctx import constrain
+from repro.models.stacks import (
+    Segment, run_segments_decode, run_segments_full, segments_cache_defs,
+    segments_param_defs,
+)
+
+
+# ---------------------------------------------------------------------------
+# Family -> segments
+# ---------------------------------------------------------------------------
+
+def _segments(cfg: ModelConfig, max_seq: int):
+    """Returns (encoder_segments, decoder_segments, extra_top_defs)."""
+    fam = cfg.family
+    extra: Dict[str, Any] = {}
+
+    if fam == "dense" and not cfg.sliding_window:
+        mk = F.make_attn_layer(cfg)
+        return [], [Segment("blocks", cfg.n_layers, *mk)], extra
+
+    if fam == "dense" and cfg.sliding_window:
+        # gemma3: repeat (n_local local + n_global global), remainder local
+        n_local, n_global = cfg.swa_pattern
+        unit_len = n_local + n_global
+        n_units = cfg.n_layers // unit_len
+        rem = cfg.n_layers - n_units * unit_len
+        local = F.make_attn_layer(cfg, window=cfg.sliding_window)
+        glob = F.make_attn_layer(cfg)
+        unit = F.make_unit([
+            ("local", F.make_stacked_sublayer(local, n_local)),
+            ("global", glob),
+        ])
+        segs = [Segment("units", n_units, *unit)]
+        if rem:
+            segs.append(Segment("tail", rem, *local))
+        return [], segs, extra
+
+    if fam == "moe":
+        segs = []
+        m = cfg.moe
+        attn_mk = (lambda **kw: F.make_mla_layer(cfg, **kw)) if cfg.mla else \
+                  (lambda **kw: F.make_attn_layer(cfg, **kw))
+        if m.first_k_dense:
+            segs.append(Segment("dense0", m.first_k_dense,
+                                *attn_mk(ffn="dense", dense_ff=m.dense_ff)))
+        segs.append(Segment("blocks", cfg.n_layers - m.first_k_dense,
+                            *attn_mk(ffn="moe")))
+        return [], segs, extra
+
+    if fam == "ssm":
+        mk = F.make_rwkv_layer(cfg)
+        return [], [Segment("blocks", cfg.n_layers, *mk)], extra
+
+    if fam == "hybrid":
+        k = cfg.shared_attn_every
+        n_units = cfg.n_layers // k
+        rem = cfg.n_layers - n_units * k
+        mamba = F.make_mamba_layer(cfg)
+        shared_window = 4096 if max_seq > 65536 else 0
+        shared_base = F.make_attn_layer(cfg, ffn="dense",
+                                        window=shared_window)
+        extra["shared_attn"] = shared_base[0]()       # weight-tied block
+        shared = _make_shared_from(shared_base)
+        unit = F.make_unit([
+            ("mamba", F.make_stacked_sublayer(mamba, k)),
+            ("shared", shared),
+        ])
+        segs = [Segment("units", n_units, *unit)]
+        if rem:
+            segs.append(Segment("tail", rem, *mamba))
+        return [], segs, extra
+
+    if fam == "encdec":
+        enc = F.make_bidir_layer(cfg)
+        enc_segs = [Segment("enc", cfg.n_enc_layers, *enc)]
+        self_l = F.make_attn_layer(cfg, rope=False)
+        cross_l = F.make_cross_layer(cfg, gated=False, n_mem=cfg.n_frames,
+                                     with_ffn=False)
+        unit = F.make_unit([("self", self_l), ("cross", cross_l)])
+        dec_segs = [Segment("blocks", cfg.n_layers, *unit)]
+        extra["enc_pos"] = ParamDef((cfg.n_frames, cfg.d_model),
+                                    ("frames", "embed"), cfg.activation_dtype)
+        extra["dec_pos"] = ParamDef((max(max_seq, 1), cfg.d_model),
+                                    (None, "embed"), cfg.activation_dtype)
+        return enc_segs, dec_segs, extra
+
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        n_units = cfg.n_layers // k
+        self_l = F.make_attn_layer(cfg)
+        cross_l = F.make_cross_layer(cfg, gated=True, n_mem=cfg.n_image_tokens)
+        unit = F.make_unit([
+            ("self", F.make_stacked_sublayer(self_l, k - 1)),
+            ("cross", cross_l),
+        ])
+        return [], [Segment("units", n_units, *unit)], extra
+
+    raise ValueError(f"unknown family {fam}")
+
+
+# shared-attn wrapper bound to an existing base (weights in ctx["shared"])
+def _make_shared_from(base):
+    def defs():
+        return {}
+
+    def fwd_full(p, x, ctx):
+        return base[1](ctx["shared"], x, ctx)
+
+    def fwd_decode(p, x1, ctx, ce):
+        return base[2](ctx["shared"], x1, ctx, ce)
+
+    def cache_defs(B, S):
+        return base[3](B, S)
+
+    return defs, fwd_full, fwd_decode, cache_defs
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    max_seq: int
+    enc_segments: List[Segment]
+    dec_segments: List[Segment]
+    _defs: Dict[str, Any]
+
+    # ---- declarative -------------------------------------------------------
+    def param_defs(self):
+        return self._defs
+
+    def cache_defs(self, batch: int):
+        cd = segments_cache_defs(self.dec_segments, batch, self.max_seq)
+        return cd
+
+    def extra_input_defs(self, batch: int):
+        """Stubbed modality inputs (DESIGN.md: the one allowed stub)."""
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        if cfg.family == "vlm":
+            return {"memory": ParamDef((batch, cfg.n_image_tokens, cfg.d_model),
+                                       ("batch", "frames", "embed"), dt)}
+        if cfg.family == "encdec":
+            return {"memory": ParamDef((batch, cfg.n_frames, cfg.d_model),
+                                       ("batch", "frames", "embed"), dt)}
+        return {}
+
+    def init(self, key):
+        return init_from_defs(self._defs, key)
+
+    def abstract_params(self):
+        return abstract_from_defs(self._defs)
+
+    def n_params(self) -> int:
+        return count_params(self._defs)
+
+    # ---- embedding / head --------------------------------------------------
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if self.cfg.embed_scale:
+            x = x * np.sqrt(self.cfg.d_model).astype(np.float32)
+        return x.astype(self.cfg.activation_dtype)
+
+    def _head_weight(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def _logits(self, params, x):
+        w = self._head_weight(params)
+        return jnp.einsum("...d,dv->...v", x, w).astype(jnp.float32)
+
+    # ---- context -----------------------------------------------------------
+    def _ctx(self, mode, positions, lengths=None, memory=None, params=None,
+             cache_len=None):
+        ctx = {
+            "mode": mode,
+            "positions": positions,
+            "lengths": lengths,
+            "memory": memory,
+            "cfg": self.cfg,
+            "cache_len": cache_len if cache_len is not None else self.max_seq,
+        }
+        if params is not None and "shared_attn" in params:
+            ctx["shared"] = params["shared_attn"]
+        return ctx
+
+    def _run_encoder(self, params, memory):
+        """encdec: run encoder over stubbed frame embeddings -> enc memory."""
+        cfg = self.cfg
+        x = memory + params["enc_pos"][None, : memory.shape[1]]
+        ctx = self._ctx("train", jnp.arange(memory.shape[1]), params=params)
+        x, _, _ = run_segments_full(params, x, self.enc_segments, ctx,
+                                    want_cache=False, remat=cfg.remat)
+        return x
+
+    def _body_full(self, params, tokens, mode, memory):
+        cfg = self.cfg
+        S = tokens.shape[1]
+        x = self._embed(params, tokens)
+        x = constrain(x, ("batch", None, "embed"))
+        if cfg.family == "encdec":
+            memory = self._run_encoder(params, memory)
+            x = x + params["dec_pos"][None, :S]
+        positions = jnp.arange(S)
+        ctx = self._ctx(mode, positions, memory=memory, params=params)
+        x, cache, aux = run_segments_full(
+            params, x, self.dec_segments, ctx,
+            want_cache=(mode == "prefill"), remat=cfg.remat)
+        x = F.rms_norm(x, params["final_norm"], cfg.rms_eps)
+        return x, cache, aux
+
+    # ---- public entry points -----------------------------------------------
+    def train_loss(self, params, batch):
+        """batch: {tokens [B,S], targets [B,S], (memory)} -> (loss, metrics)."""
+        cfg = self.cfg
+        x, _, aux = self._body_full(params, batch["tokens"], "train",
+                                    batch.get("memory"))
+        loss, acc = chunked_cross_entropy(
+            x, self._head_weight(params), batch["targets"], cfg.loss_chunk)
+        return loss + aux, {"ce": loss, "aux": aux, "acc": acc}
+
+    def prefill(self, params, tokens, memory=None, lengths=None):
+        """lengths [B]: per-row prompt lengths (right-padded batches) — the
+        returned logits are taken at each row's last real token."""
+        x, cache, _ = self._body_full(params, tokens, "prefill", memory)
+        if lengths is None:
+            last = x[:, -1]
+        else:
+            last = x[jnp.arange(x.shape[0]), lengths - 1]
+        logits = self._logits(params, last)
+        return logits, cache
+
+    def forward_logits(self, params, tokens, memory=None):
+        x, _, _ = self._body_full(params, tokens, "train", memory)
+        return self._logits(params, x)
+
+    def decode_step(self, params, cache, tokens1, positions):
+        """tokens1 [B,1]; positions [B] (position of this token)."""
+        cfg = self.cfg
+        x1 = self._embed(params, tokens1)
+        if cfg.family == "encdec":
+            x1 = x1 + jnp.take(params["dec_pos"], positions, axis=0)[:, None]
+        lengths = positions + 1
+        ctx = self._ctx("decode", positions, lengths=lengths, params=params)
+        x1, new_cache, _ = run_segments_decode(params, x1, self.dec_segments,
+                                               ctx, cache)
+        x1 = F.rms_norm(x1, params["final_norm"], cfg.rms_eps)
+        logits = self._logits(params, x1[:, 0])
+        return logits, new_cache
+
+
+def chunked_cross_entropy(x, head_w, targets, chunk: int):
+    """CE over [B,S,D] hidden states without materializing [B,S,V] logits.
+
+    Scans over sequence chunks with remat — with qwen2-72b at 1M tokens the
+    full logit tensor would be ~300 TB; chunked, the live slice is
+    B x chunk x V (sharded over vocab/model).
+    """
+    B, S, D = x.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    xc = x.reshape(B, n, c, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n, c).transpose(1, 0, 2)
+
+    def body(carry, args):
+        xi, ti = args
+        logits = jnp.einsum("bsd,dv->bsv", xi, head_w).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt).sum()
+        correct = (jnp.argmax(logits, -1) == ti).sum()
+        return (carry[0] + nll, carry[1] + correct), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (nll, correct), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xc, tc))
+    n_tok = B * S
+    return nll / n_tok, correct.astype(jnp.float32) / n_tok
+
+
+def build_model(cfg: ModelConfig, max_seq: int = 4096) -> Model:
+    enc_segs, dec_segs, extra = _segments(cfg, max_seq)
+    defs: Dict[str, Any] = {}
+    defs["embed"] = ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                             cfg.activation_dtype, init="embed")
+    defs.update(segments_param_defs(enc_segs))
+    defs.update(segments_param_defs(dec_segs))
+    defs["final_norm"] = F.rms_norm_def(cfg.d_model)
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab),
+                                   ("embed", "vocab"), cfg.activation_dtype)
+    defs.update(extra)
+    return Model(cfg, max_seq, enc_segs, dec_segs, defs)
+
+
+__all__ = ["Model", "build_model", "chunked_cross_entropy"]

@@ -1,0 +1,230 @@
+"""Shared model layers: RMSNorm, RoPE, SwiGLU, GQA attention (blockwise
+causal, sliding-window, cross, decode).
+
+Attention is implemented *blockwise* (lax.scan over query chunks) so that the
+S x S score matrix is never materialized — required for the 32k-prefill shapes
+where a full score tensor would be petabytes. GQA is computed with grouped
+einsums (no KV head repetition in HBM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.pdefs import ParamDef
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms / FFN
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+def rms_norm_def(d: int) -> ParamDef:
+    # stored as a delta around 1.0 (zeros init) — gemma-style
+    return ParamDef((d,), ("embed",), init="zeros")
+
+
+def swiglu_defs(d: int, ff: int, dtype=jnp.bfloat16):
+    return {
+        "wi_gate": ParamDef((d, ff), ("embed", "ff"), dtype),
+        "wi_up": ParamDef((d, ff), ("embed", "ff"), dtype),
+        "wo": ParamDef((ff, d), ("ff", "embed"), dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D] (D even), positions: broadcastable to [..., S]."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))          # [D/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                   # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA projections
+# ---------------------------------------------------------------------------
+
+def gqa_proj_defs(d: int, n_heads: int, n_kv: int, hd: int, bias: bool,
+                  dtype=jnp.bfloat16):
+    defs = {
+        "wq": ParamDef((d, n_heads, hd), ("embed", "heads", None), dtype),
+        "wk": ParamDef((d, n_kv, hd), ("embed", "kv_heads", None), dtype),
+        "wv": ParamDef((d, n_kv, hd), ("embed", "kv_heads", None), dtype),
+        "wo": ParamDef((n_heads, hd, d), ("heads", None, "embed"), dtype),
+    }
+    if bias:
+        defs["bq"] = ParamDef((n_heads, hd), ("heads", None), dtype, init="zeros")
+        defs["bk"] = ParamDef((n_kv, hd), ("kv_heads", None), dtype, init="zeros")
+        defs["bv"] = ParamDef((n_kv, hd), ("kv_heads", None), dtype, init="zeros")
+    return defs
+
+
+def qkv(params, x):
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+def out_proj(params, attn):  # attn [B,S,H,hd]
+    return jnp.einsum("bshe,hed->bsd", attn, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k, scale):
+    """q [B,Sq,KV,G,hd], k [B,Sk,KV,hd] -> [B,KV,G,Sq,Sk] (f32)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_out(p, v):
+    """p [B,KV,G,Sq,Sk] (f32), v [B,Sk,KV,hd] -> [B,Sq,KV,G,hd]."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+
+
+def _attend(q, k, v, mask, scale):
+    """One attention block. mask broadcastable to [B,1,1,Sq,Sk] (True=keep)."""
+    s = _gqa_scores(q, k, scale)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v)
+
+
+def causal_attention(q, k, v, *, n_kv: int, window: int = 0,
+                     q_chunk: int = 1024, q_offset=0):
+    """Blockwise causal (optionally sliding-window) self-attention.
+
+    q: [B,S,H,hd]; k,v: [B,Sk,KV,hd]. q_offset: absolute position of q[0]
+    (static int or traced scalar). Returns [B,S,H,hd].
+    """
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    hv = v.shape[-1]
+    G = H // n_kv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, S, n_kv, G, hd)
+
+    if S <= q_chunk:
+        qpos = q_offset + jnp.arange(S)
+        kpos = jnp.arange(Sk)
+        mask = kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        out = _attend(qg, k, v, mask[None, None, None], scale)
+        return out.reshape(B, S, H, hv)
+
+    assert S % q_chunk == 0, (S, q_chunk)
+    n = S // q_chunk
+    qc = qg.reshape(B, n, q_chunk, n_kv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    kv_span = 0
+    if window:
+        # each q-chunk only needs the last (window + q_chunk) keys
+        kv_span = min(Sk, window + q_chunk)
+
+    def body(_, args):
+        i, qi = args
+        cs = q_offset + i * q_chunk               # abs position of chunk start
+        qpos = cs + jnp.arange(q_chunk)
+        if window and kv_span < Sk:
+            start = jnp.clip(cs - window, 0, Sk - kv_span)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+            kpos = start + jnp.arange(kv_span)
+        else:
+            ki, vi = k, v
+            kpos = jnp.arange(Sk)
+        mask = kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        out = _attend(qi, ki, vi, mask[None, None, None], scale)
+        return None, out
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n), qc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hv)
+    return out
+
+
+def cross_attention(q, k, v, *, n_kv: int):
+    """Full (non-causal) attention to a fixed memory. q [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    G = H // n_kv
+    qg = q.reshape(B, S, n_kv, G, hd)
+    out = _attend(qg, k, v, jnp.bool_(True), 1.0 / np.sqrt(hd))
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, n_kv: int,
+                     window: int = 0, ring: bool = False):
+    """Single-token decode attention against a KV cache.
+
+    q: [B,H,hd] (the one new token, rope already applied)
+    k_cache/v_cache: [B,S,KV,hd]; lengths: [B] number of valid tokens
+    (including the one just written). ring=True means the cache is a
+    ring-buffer of size `window` (slot = pos % window) — any slot < min(len,
+    S) is valid and order is irrelevant to softmax.
+    """
+    B, H, hd = q.shape
+    S = k_cache.shape[1]
+    G = H // n_kv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, 1, n_kv, G, hd)
+    slots = jnp.arange(S)
+    if ring:
+        valid = slots[None, :] < jnp.minimum(lengths, S)[:, None]
+    else:
+        valid = slots[None, :] < lengths[:, None]
+        if window:
+            valid &= slots[None, :] >= (lengths[:, None] - window)
+    mask = valid[:, None, None, None, :]              # [B,1,1,1,S]
+    out = _attend(qg, k_cache, v_cache, mask, scale)
+    return out.reshape(B, H, v_cache.shape[-1])
+
+
+__all__ = [
+    "rms_norm", "rms_norm_def", "swiglu", "swiglu_defs", "apply_rope",
+    "rope_freqs", "gqa_proj_defs", "qkv", "out_proj", "causal_attention",
+    "cross_attention", "decode_attention", "NEG_INF",
+]

@@ -1,0 +1,159 @@
+"""Mamba2 (SSD) block — chunked-scan TPU formulation.
+
+Instead of a per-timestep recurrence (GPU-style selective scan), we use the
+SSD block decomposition: quadratic *within* a chunk (MXU matmuls) and a
+single inter-chunk state recurrence (lax.scan over S/chunk steps). All decay
+exponentials are of non-positive arguments, so the chunked form is
+numerically safe without rescaling.
+
+State layout: S [B, H, P, N] with H = expand*d/d_head heads, P = d_head,
+N = d_state. B/C projections are shared across heads (multi-value SSD).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMConfig
+from repro.models.pdefs import ParamDef
+
+
+def mamba2_dims(d: int, s: SSMConfig):
+    d_in = s.expand * d
+    n_heads = d_in // s.d_head
+    return d_in, n_heads
+
+
+def mamba2_defs(d: int, s: SSMConfig, dtype=jnp.bfloat16):
+    d_in, H = mamba2_dims(d, s)
+    N, W = s.d_state, s.conv_width
+    conv_ch = d_in + 2 * N
+    return {
+        "w_z": ParamDef((d, d_in), ("embed", "ff"), dtype),
+        "w_x": ParamDef((d, d_in), ("embed", "ff"), dtype),
+        "w_bc": ParamDef((d, 2 * N), ("embed", None), dtype),
+        "w_dt": ParamDef((d, H), ("embed", "heads"), dtype),
+        "dt_bias": ParamDef((H,), ("heads",), jnp.float32, init="zeros"),
+        "conv_w": ParamDef((W, conv_ch), (None, "ff"), jnp.float32, init="normal",
+                           fan_in_dims=(0,)),
+        "A_log": ParamDef((H,), ("heads",), jnp.float32, init="zeros"),
+        "D_skip": ParamDef((H,), ("heads",), jnp.float32, init="ones"),
+        "out_norm": ParamDef((d_in,), ("ff",), init="zeros"),
+        "w_out": ParamDef((d_in, d), ("ff", "embed"), dtype),
+    }
+
+
+def _causal_conv(u, w, init_state=None):
+    """Depthwise causal conv. u [B,S,C], w [W,C]. init_state [B,W-1,C]."""
+    W = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([init_state.astype(u.dtype), u], axis=1)
+    out = sum(up[:, i : i + u.shape[1]] * w[i].astype(u.dtype) for i in range(W))
+    new_state = up[:, -(W - 1):] if W > 1 else init_state
+    return out, new_state
+
+
+def _project(params, x, s: SSMConfig, conv_state=None):
+    """Shared front half: projections + causal conv + activations."""
+    d_in, H = mamba2_dims(x.shape[-1], s)
+    N = s.d_state
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"])
+    xs = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    bc = jnp.einsum("bsd,de->bse", x, params["w_bc"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_dt"]).astype(jnp.float32)
+    u = jnp.concatenate([xs, bc], axis=-1)
+    u, new_conv = _causal_conv(u, params["conv_w"], conv_state)
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    xs, B_, C_ = u[..., :d_in], u[..., d_in : d_in + N], u[..., d_in + N :]
+    dt = jax.nn.softplus(dt + params["dt_bias"])                  # [B,S,H]
+    A = -jnp.exp(params["A_log"])                                 # [H] (<0)
+    la = dt * A                                                   # log-decay <= 0
+    xh = xs.reshape(*xs.shape[:-1], H, s.d_head)                  # [B,S,H,P]
+    return z, xh, B_, C_, dt, la, new_conv
+
+
+def mamba2_scan(params, x, s: SSMConfig, init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence chunked SSD. x [B,S,D] -> (y [B,S,D], final_state)."""
+    Bsz, S, D = x.shape
+    d_in, H = mamba2_dims(D, s)
+    P, N = s.d_head, s.d_state
+    L = min(s.chunk, S)
+    while S % L:
+        L -= 1
+    nC = S // L
+
+    z, xh, B_, C_, dt, la, _ = _project(params, x, s)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    # reshape into chunks
+    def ch(a):
+        return a.reshape(Bsz, nC, L, *a.shape[2:])
+    xh_c, B_c, C_c, dt_c, la_c = map(ch, (xh, B_, C_, dt, la))
+    cum = jnp.cumsum(la_c, axis=2)                                # [B,nC,L,H]
+
+    xdt = xh_c * dt_c[..., None]                                  # [B,nC,L,H,P]
+    # intra-chunk: M[b,c,h,t,s] = (C_t . B_s) * exp(cum_t - cum_s) * causal
+    G = jnp.einsum("bctn,bcsn->bcts", C_c.astype(jnp.float32),
+                   B_c.astype(jnp.float32))                       # [B,nC,L,L]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # [B,nC,t,s,H]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    M = G[..., None] * decay                                      # [B,nC,t,s,H]
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", M, xdt.astype(jnp.float32))
+
+    # chunk-final states: S_end = sum_s exp(cum_L - cum_s) * xdt_s (x) B_s
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum)                      # [B,nC,L,H]
+    S_end = jnp.einsum("bcsh,bcshp,bcsn->bchpn",
+                       w_end, xdt.astype(jnp.float32),
+                       B_c.astype(jnp.float32))                   # per-chunk
+
+    # inter-chunk recurrence over nC chunks
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # [B,nC,H]
+
+    def body(S_prev, args):
+        S_end_c, cd_c = args                                      # [B,H,P,N],[B,H]
+        S_new = cd_c[:, :, None, None] * S_prev + S_end_c
+        return S_new, S_prev
+
+    S_ends = jnp.moveaxis(S_end, 1, 0)                            # [nC,B,H,P,N]
+    cds = jnp.moveaxis(chunk_decay, 1, 0)                         # [nC,B,H]
+    final_state, S_prevs = jax.lax.scan(body, init_state, (S_ends, cds))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                         # [B,nC,H,P,N]
+
+    y_inter = jnp.einsum("bcth,bctn,bchpn->bcthp",
+                         jnp.exp(cum), C_c.astype(jnp.float32), S_prevs)
+
+    y = y_intra + y_inter + params["D_skip"][None, None, None, :, None] * xh_c.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # group norm (rms over channels)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * (1.0 + params["out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["w_out"])
+    return out, final_state
+
+
+def mamba2_step(params, x1, s: SSMConfig, state, conv_state):
+    """Single decode step. x1 [B,1,D]; state [B,H,P,N]; conv_state [B,W-1,C]."""
+    Bsz, _, D = x1.shape
+    d_in, H = mamba2_dims(D, s)
+    z, xh, B_, C_, dt, la, new_conv = _project(params, x1, s, conv_state)
+    xdt = (xh * dt[..., None])[:, 0].astype(jnp.float32)          # [B,H,P]
+    a = jnp.exp(la[:, 0])                                         # [B,H]
+    new_state = (a[:, :, None, None] * state
+                 + jnp.einsum("bhp,bn->bhpn", xdt, B_[:, 0].astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", C_[:, 0].astype(jnp.float32), new_state)
+    y = y + params["D_skip"][None, :, None] * xh[:, 0].astype(jnp.float32)
+    y = y.reshape(Bsz, 1, d_in) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * (1.0 + params["out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y.astype(x1.dtype), params["w_out"])
+    return out, new_state, new_conv
+
+
+__all__ = ["mamba2_defs", "mamba2_scan", "mamba2_step", "mamba2_dims"]

@@ -1,0 +1,95 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Prefill/train use the *expanded* form (per-head K/V materialized, blockwise
+causal attention). Decode uses the *absorbed* form: the cache stores only the
+compressed latent c_kv [B,S,lora] + shared rope key [B,S,rope], and the
+W_uk / W_uv up-projections are folded into the query/output sides — the
+memory win that makes MLA attractive for 32k-decode serving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLAConfig
+from repro.models.layers import apply_rope, causal_attention, rms_norm_def, rms_norm
+from repro.models.pdefs import ParamDef
+
+
+def mla_defs(d: int, n_heads: int, m: MLAConfig, dtype=jnp.bfloat16):
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    defs = {
+        "wq": ParamDef((d, n_heads, qd), ("embed", "heads", None), dtype),
+        "w_dkv": ParamDef((d, m.kv_lora_rank), ("embed", "lora"), dtype),
+        "kv_norm": rms_norm_def(m.kv_lora_rank),
+        "w_kr": ParamDef((d, m.qk_rope_dim), ("embed", None), dtype),
+        "w_uk": ParamDef((m.kv_lora_rank, n_heads, m.qk_nope_dim),
+                         ("lora", "heads", None), dtype),
+        "w_uv": ParamDef((m.kv_lora_rank, n_heads, m.v_head_dim),
+                         ("lora", "heads", None), dtype),
+        "wo": ParamDef((n_heads, m.v_head_dim, d), ("heads", None, "embed"), dtype),
+    }
+    return defs
+
+
+def _project_q(params, x, m: MLAConfig, positions, theta):
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    q_nope = q[..., : m.qk_nope_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_dim:], positions, theta)
+    return q_nope, q_rope
+
+
+def mla_latents(params, x, m: MLAConfig, positions, theta, eps):
+    """Compressed latents (what the decode cache stores)."""
+    c_kv = jnp.einsum("bsd,dl->bsl", x, params["w_dkv"])
+    c_kv = rms_norm(c_kv, params["kv_norm"], eps)
+    k_rope = jnp.einsum("bsd,de->bse", x, params["w_kr"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention_prefill(params, x, m: MLAConfig, *, positions, theta, eps,
+                          q_chunk=1024):
+    """Expanded-form causal MLA. x [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    H = params["wq"].shape[1]
+    q_nope, q_rope = _project_q(params, x, m, positions, theta)
+    c_kv, k_rope = mla_latents(params, x, m, positions, theta, eps)
+    k_nope = jnp.einsum("bsl,lhe->bshe", c_kv, params["w_uk"])
+    v = jnp.einsum("bsl,lhe->bshe", c_kv, params["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)              # [B,S,H,qd]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.qk_rope_dim))],
+        axis=-1)
+    out = causal_attention(q, k, v, n_kv=H, q_chunk=q_chunk)
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, (c_kv, k_rope)
+
+
+def mla_attention_decode(params, x1, m: MLAConfig, cache_ckv, cache_kr,
+                         lengths, *, positions, theta, eps):
+    """Absorbed-form decode. x1 [B,1,D]; caches already contain this token.
+
+    cache_ckv [B,S,lora], cache_kr [B,S,rope]; lengths [B].
+    """
+    B = x1.shape[0]
+    q_nope, q_rope = _project_q(params, x1, m, positions[:, None], theta)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]                 # [B,H,*]
+    # absorb W_uk into q: q_lat [B,H,lora]
+    q_lat = jnp.einsum("bhe,lhe->bhl", q_nope, params["w_uk"])
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = (jnp.einsum("bhl,bsl->bhs", q_lat.astype(jnp.float32),
+                    cache_ckv.astype(jnp.float32))
+         + jnp.einsum("bhe,bse->bhs", q_rope.astype(jnp.float32),
+                      cache_kr.astype(jnp.float32))) * scale
+    valid = jnp.arange(cache_ckv.shape[1])[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsl->bhl", p.astype(cache_ckv.dtype), cache_ckv)
+    ctx = jnp.einsum("bhl,lhe->bhe", ctx_lat, params["w_uv"])   # [B,H,v]
+    out = jnp.einsum("bhe,hed->bd", ctx, params["wo"])
+    return out[:, None, :]                                      # [B,1,D]
+
+
+__all__ = ["mla_defs", "mla_latents", "mla_attention_prefill", "mla_attention_decode"]

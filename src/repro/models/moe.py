@@ -1,0 +1,219 @@
+"""Mixture-of-Experts FFN with capacity-bounded scatter dispatch.
+
+GShard-style expert parallelism adapted for TPU: tokens are grouped (one
+group per sequence by default), routed top-k, and scatter-added into a
+[groups, experts, capacity, d] dispatch buffer. With experts sharded over the
+"model" mesh axis and groups over "data", XLA SPMD inserts the all-to-all on
+the group<->expert exchange — the paper-agnostic substrate for the two MoE
+architectures assigned to this reproduction (olmoe-1b-7b, deepseek-v2-lite).
+
+We deliberately avoid the classic [tokens, experts, capacity] one-hot einsum
+dispatch: at 1M tokens it would materialize petabyte-scale tensors. The
+scatter/gather formulation keeps the footprint at O(G*E*C*D).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import MoEConfig
+from repro.models.pdefs import ParamDef
+from repro.models.shardctx import constrain, current_mesh
+
+
+def moe_defs(d: int, m: MoEConfig, dtype=jnp.bfloat16):
+    E, F = m.n_experts, m.expert_ff
+    defs = {
+        "router": ParamDef((d, E), ("embed", "experts"), jnp.float32),
+        "wi_gate": ParamDef((E, d, F), ("experts", "embed", "ff"), dtype,
+                            fan_in_dims=(1,)),
+        "wi_up": ParamDef((E, d, F), ("experts", "embed", "ff"), dtype,
+                          fan_in_dims=(1,)),
+        "wo": ParamDef((E, F, d), ("experts", "ff", "embed"), dtype,
+                       fan_in_dims=(1,)),
+    }
+    if m.n_shared_experts:
+        SF = m.n_shared_experts * F
+        defs["shared"] = {
+            "wi_gate": ParamDef((d, SF), ("embed", "ff"), dtype),
+            "wi_up": ParamDef((d, SF), ("embed", "ff"), dtype),
+            "wo": ParamDef((SF, d), ("ff", "embed"), dtype),
+        }
+    return defs
+
+
+def _group_tokens(x, group_size: int):
+    """[B,S,D] -> [G, g, D] preserving batch-major order."""
+    B, S, D = x.shape
+    T = B * S
+    g = min(group_size, T)
+    while T % g:
+        g -= 1
+    return x.reshape(T // g, g, D), g
+
+
+def moe_ffn(params, x, m: MoEConfig, *, group_size: int = 4096,
+            dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out [B,S,D], aux_loss scalar). Dispatches to the explicit
+    expert-parallel schedule when configured and a mesh is installed."""
+    mesh = current_mesh()
+    if (m.shard_mode == "ep" and mesh is not None
+            and "model" in mesh.shape
+            and m.n_experts % mesh.shape["model"] == 0):
+        return _moe_ffn_ep(params, x, m, mesh, group_size=group_size,
+                           dtype=dtype)
+    return _moe_ffn_auto(params, x, m, group_size=group_size, dtype=dtype)
+
+
+def _moe_ffn_auto(params, x, m: MoEConfig, *, group_size: int = 4096,
+                  dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """Baseline: rely on XLA SPMD propagation (paper-faithful substrate)."""
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    xg, g = _group_tokens(x, group_size)
+    G = xg.shape[0]
+    C = max(int(np.ceil(g * K / E * m.capacity_factor)), 1)
+
+    # --- routing (f32) ------------------------------------------------------
+    logits = jnp.einsum("Gtd,de->Gte", xg.astype(jnp.float32),
+                        params["router"])                       # [G,g,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                      # [G,g,K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))                                # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+
+    # --- capacity assignment -------------------------------------------------
+    # flatten (token, k) assignments in priority order within each group
+    e_flat = top_e.reshape(G, g * K)                            # [G,gK]
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)         # [G,gK,E]
+    slot = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1    # [G,gK]
+    keep = slot < C
+    slot_c = jnp.clip(slot, 0, C - 1)
+
+    # --- dispatch: scatter tokens into [G,E,C,D] -----------------------------
+    xr = jnp.repeat(xg, K, axis=1)                              # [G,gK,D]
+    w_flat = (top_w.reshape(G, g * K) * keep).astype(jnp.float32)
+    disp = jnp.zeros((G, E, C, D), dtype)
+    gi = jnp.arange(G)[:, None]
+    disp = disp.at[gi, e_flat, slot_c].add(
+        jnp.where(keep[..., None], xr, 0).astype(dtype))
+    disp = constrain(disp, ("batch", "experts", None, None))
+
+    # --- expert computation (all-to-all boundary under SPMD) -----------------
+    h_g = jnp.einsum("GEcd,Edf->GEcf", disp, params["wi_gate"])
+    h_u = jnp.einsum("GEcd,Edf->GEcf", disp, params["wi_up"])
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(dtype) * h_u
+    y = jnp.einsum("GEcf,Efd->GEcd", h, params["wo"])           # [G,E,C,D]
+    y = constrain(y, ("batch", "experts", None, None))
+
+    # --- combine: gather expert outputs back to tokens -----------------------
+    y_tok = y[gi, e_flat, slot_c]                               # [G,gK,D]
+    y_tok = y_tok * w_flat[..., None].astype(y_tok.dtype)
+    out = y_tok.reshape(G, g, K, D).sum(axis=2)                 # [G,g,D]
+    out = out.reshape(B, S, D)
+
+    if m.n_shared_experts:
+        from repro.models.layers import swiglu
+        out = out + swiglu(params["shared"], x)
+    return out.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Explicit expert-parallel schedule (§Perf beyond-paper optimization)
+# ---------------------------------------------------------------------------
+
+def _moe_ffn_ep(params, x, m: MoEConfig, mesh, *, group_size: int = 4096,
+                dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """shard_map expert parallelism over the "model" axis.
+
+    Tokens are replicated across "model" (batch is data-sharded), so no
+    dispatch exchange is needed at all: every model shard routes all tokens,
+    keeps only the assignments owned by its local expert slice, runs the
+    expert FFN locally, and the combined token outputs are psum'd over
+    "model". Collective cost per layer = one all-reduce of [tokens, D] —
+    vs the auto schedule's all-reduce of the full [G,E,C,D] dispatch
+    buffers.
+    """
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    n_model = mesh.shape["model"]
+    E_loc = E // n_model
+    xg, g = _group_tokens(x, group_size)
+    G = xg.shape[0]
+    C = max(int(np.ceil(g * K / E * m.capacity_factor)), 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape
+                       and G % mesh.shape[a] == 0)
+    gspec = batch_axes if batch_axes else None
+
+    def local(xg_l, router, wi_g, wi_u, wo):
+        midx = jax.lax.axis_index("model")
+        lo = midx * E_loc
+        Gl = xg_l.shape[0]
+        logits = jnp.einsum("Gtd,de->Gte", xg_l.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, K)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+        me = probs.mean(axis=(0, 1))
+        ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+        ce = ce / jnp.maximum(ce.sum(), 1.0)
+        aux = E * jnp.sum(me * ce) * m.router_aux_weight
+        # aux identical on every model shard; average keeps it replicated
+        aux = jax.lax.pmean(aux, "model")
+
+        e_flat = top_e.reshape(Gl, g * K)
+        onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+        slot = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1
+        e_local = e_flat - lo
+        keep = (slot < C) & (e_local >= 0) & (e_local < E_loc)
+        slot_c = jnp.clip(slot, 0, C - 1)
+        e_loc_c = jnp.clip(e_local, 0, E_loc - 1)
+
+        xr = jnp.repeat(xg_l, K, axis=1)
+        w_flat = (top_w.reshape(Gl, g * K) * keep).astype(jnp.float32)
+        disp = jnp.zeros((Gl, E_loc, C, D), dtype)
+        gi = jnp.arange(Gl)[:, None]
+        disp = disp.at[gi, e_loc_c, slot_c].add(
+            jnp.where(keep[..., None], xr, 0).astype(dtype))
+
+        h_g = jnp.einsum("GEcd,Edf->GEcf", disp, wi_g)
+        h_u = jnp.einsum("GEcd,Edf->GEcf", disp, wi_u)
+        h = jax.nn.silu(h_g.astype(jnp.float32)).astype(dtype) * h_u
+        y = jnp.einsum("GEcf,Efd->GEcd", h, wo)
+
+        y_tok = y[gi, e_loc_c, slot_c] * w_flat[..., None].astype(y.dtype)
+        out = y_tok.reshape(Gl, g, K, D).sum(axis=2)
+        # combine across expert owners — in the compute dtype: each token's
+        # contribution comes from <= top_k shards, so bf16 psum loses at
+        # most one rounding step vs f32 (measured §Perf pair 1 iter 2)
+        out = jax.lax.psum(out.astype(dtype), "model")
+        return out, aux
+
+    other = tuple(a for a in mesh.axis_names if a not in (batch_axes or ()))
+    out, aux = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(gspec, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(gspec, None, None), P()),
+        check_rep=False,
+    )(xg, params["router"], params["wi_gate"], params["wi_up"], params["wo"])
+    out = out.reshape(B, S, D)
+    if m.n_shared_experts:
+        from repro.models.layers import swiglu
+        out = out + swiglu(params["shared"], x)
+    return out.astype(x.dtype), aux
+
+
+__all__ = ["moe_defs", "moe_ffn"]

@@ -1,0 +1,228 @@
+"""RWKV-6 (Finch) block: data-dependent decay linear attention + channel mix.
+
+The wkv recurrence keeps a per-head matrix state S [B,H,K,V]:
+    y_t = r_t @ (S_{t-1} + (u * k_t)^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+with per-channel decay w_t = exp(-exp(w0 + lora_w(x))) (data-dependent — the
+Finch contribution) and token-shift "ddlerp" interpolation with a low-rank
+adapter.
+
+Baseline implementation is a sequential lax.scan over time (exact). A
+chunked MXU-friendly variant (`rwkv6_scan(..., chunk=L)`) processes L steps
+per matmul block and is the §Perf optimization target; chunk=1 falls back to
+the sequential path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.pdefs import ParamDef
+
+DDLERP_RANK = 32
+DECAY_RANK = 64
+N_MIX = 5  # w,k,v,r,g
+
+
+def rwkv6_dims(d: int, d_head: int):
+    return d // d_head  # n_heads
+
+
+def rwkv6_defs(d: int, d_ff: int, d_head: int, dtype=jnp.bfloat16):
+    H = rwkv6_dims(d, d_head)
+    return {
+        "tm": {  # time mix
+            "mu_x": ParamDef((N_MIX, d), (None, "embed"), jnp.float32, init="zeros"),
+            "ddlerp_a": ParamDef((d, N_MIX * DDLERP_RANK), ("embed", "lora"), dtype),
+            "ddlerp_b": ParamDef((N_MIX, DDLERP_RANK, d), (None, "lora", "embed"), dtype),
+            "w_r": ParamDef((d, d), ("embed", "heads"), dtype),
+            "w_k": ParamDef((d, d), ("embed", "heads"), dtype),
+            "w_v": ParamDef((d, d), ("embed", "heads"), dtype),
+            "w_g": ParamDef((d, d), ("embed", "heads"), dtype),
+            "w_o": ParamDef((d, d), ("heads", "embed"), dtype),
+            "decay_w0": ParamDef((d,), ("embed",), jnp.float32, init="zeros"),
+            "decay_a": ParamDef((d, DECAY_RANK), ("embed", "lora"), dtype),
+            "decay_b": ParamDef((DECAY_RANK, d), ("lora", "embed"), dtype),
+            "bonus_u": ParamDef((H, d_head), ("heads", None), jnp.float32, init="zeros"),
+            "ln_x": ParamDef((d,), ("embed",), init="zeros"),
+        },
+        "cm": {  # channel mix
+            "mu_k": ParamDef((d,), ("embed",), jnp.float32, init="zeros"),
+            "mu_r": ParamDef((d,), ("embed",), jnp.float32, init="zeros"),
+            "w_k": ParamDef((d, d_ff), ("embed", "ff"), dtype),
+            "w_v": ParamDef((d_ff, d), ("ff", "embed"), dtype),
+            "w_r": ParamDef((d, d), ("embed", "heads"), dtype),
+        },
+    }
+
+
+def _shift(x, last):
+    """x [B,S,D]; last [B,1,D] (previous token, zeros at start)."""
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent 5-way token-shift interpolation -> [5][B,S,D]."""
+    xx = x_prev - x
+    base = x + xx * p["mu_x"][0]  # use first mu as the adapter input mix
+    low = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, p["ddlerp_a"])
+                   .reshape(*x.shape[:2], N_MIX, DDLERP_RANK))
+    delta = jnp.einsum("bsmr,mrd->bsmd", low, p["ddlerp_b"])     # [B,S,5,D]
+    outs = []
+    for i in range(N_MIX):
+        mi = p["mu_x"][i] + delta[:, :, i].astype(jnp.float32)
+        outs.append(x + xx * mi.astype(x.dtype))
+    return outs
+
+
+def _tm_project(p, x, x_prev, d_head: int):
+    """Projections + decay for the time-mix. Returns r,k,v,g,w(decay),H-shaped."""
+    B, S, D = x.shape
+    H = D // d_head
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(B, S, H, d_head)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(B, S, H, d_head)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(B, S, H, d_head)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"]).astype(jnp.float32))
+    dd = jnp.einsum("bsd,dr->bsr", xw, p["decay_a"])
+    dd = jnp.einsum("bsr,rd->bsd", jnp.tanh(dd), p["decay_b"])
+    logw = -jnp.exp(p["decay_w0"] + dd.astype(jnp.float32))      # <= 0
+    w = jnp.exp(logw).reshape(B, S, H, d_head)                   # decay in (0,1)
+    return r, k, v, g, w, logw.reshape(B, S, H, d_head)
+
+
+def _tm_finish(p, wkv_out, g, x_dtype):
+    """Per-head groupnorm + gate + output projection."""
+    B, S, H, dv = wkv_out.shape
+    y = wkv_out
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(B, S, H * dv) * (1.0 + p["ln_x"])
+    y = y * g
+    return jnp.einsum("bse,ed->bsd", y.astype(x_dtype), p["w_o"])
+
+
+def time_mix(p, x, d_head: int, state=None, x_last=None,
+             chunk: int = 1) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence time-mix. Returns (out, final_state, last_x).
+
+    state: [B,H,K,V] f32; x_last: [B,1,D] previous token for the shift.
+    """
+    B, S, D = x.shape
+    H = D // d_head
+    if x_last is None:
+        x_last = jnp.zeros((B, 1, D), x.dtype)
+    if state is None:
+        state = jnp.zeros((B, H, d_head, d_head), jnp.float32)
+    x_prev = _shift(x, x_last)
+    r, k, v, g, w, logw = _tm_project(p, x, x_prev, d_head)
+    u = p["bonus_u"]
+
+    if chunk > 1 and S % chunk == 0 and S > chunk:
+        out, final = _wkv_chunked(r, k, v, w, logw, u, state, chunk)
+    else:
+        out, final = _wkv_sequential(r, k, v, w, u, state)
+    y = _tm_finish(p, out, g, x.dtype)
+    return y, final, x[:, -1:]
+
+
+def _wkv_sequential(r, k, v, w, u, state):
+    """Exact per-step recurrence (oracle / baseline)."""
+    B, S, H, dk = r.shape
+    rs, ks, vs, ws = (jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+                      for a in (r, k, v, w))
+
+    def body(S_prev, args):
+        rt, kt, vt, wt = args                                    # [B,H,dk]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, S_prev + u[None] [..., None] * kv)
+        S_new = wt[..., None] * S_prev + kv
+        return S_new, yt
+
+    final, ys = jax.lax.scan(body, state, (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), final                         # [B,S,H,dv]
+
+
+def _wkv_chunked(r, k, v, w, logw, u, state, L: int):
+    """Chunked linear-attention form (MXU-friendly §Perf variant).
+
+    All exponentials have non-positive arguments (cum log-decays are
+    monotonically decreasing), so the chunked form is numerically safe:
+      intra-chunk decay(t,s) = exp(cum_{t-1} - cum_s)  for s < t   (<= 1)
+      inter-chunk factor     = exp(cum_{t-1})                       (<= 1)
+      state carry factor     = exp(cum_L - cum_s)                   (<= 1)
+    The intra-chunk pairwise diff tensor is [B,L,L,H,K]; L is capped at 64
+    to bound its footprint (secondary chunking would lift this — §Perf).
+    """
+    B, S, H, dk = r.shape
+    assert L <= 64, "chunked wkv uses a direct pairwise-diff; keep chunk <= 64"
+    nC = S // L
+
+    def ch(a):
+        return jnp.moveaxis(a.reshape(B, nC, L, H, dk), 1, 0)    # [nC,B,L,H,dk]
+    rc, kc, vc, lc = map(ch, (r, k, v, logw))
+    rc, kc, vc = (a.astype(jnp.float32) for a in (rc, kc, vc))
+    lc = lc.astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+
+    def body(S_prev, args):
+        rt, kt, vt, lt = args                                    # [B,L,H,dk]
+        cum = jnp.cumsum(lt, axis=1)                             # inclusive
+        cum_prev = cum - lt                                      # cum_{t-1}
+        # inter-chunk: y_inter[t] = (r_t * exp(cum_{t-1})) @ S_prev
+        y_inter = jnp.einsum("blhk,bhkv->blhv", rt * jnp.exp(cum_prev), S_prev)
+        # intra-chunk, direct log-space pairwise differences (all <= 0)
+        diff = cum_prev[:, :, None] - cum[:, None, :, :]         # [B,t,s,H,K]
+        dec = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        A = jnp.einsum("bthk,bshk,btshk->bhts", rt, kt, dec)
+        diag = jnp.einsum("blhk,blhk->blh", rt, u[None, None] * kt)
+        y_intra = jnp.einsum("bhts,bshv->bthv", A, vt) + diag[..., None] * vt
+        # state update
+        wL = jnp.exp(cum[:, -1])                                 # [B,H,dk]
+        kw = kt * jnp.exp(cum[:, -1:, :, :] - cum)
+        S_new = wL[..., None] * S_prev + jnp.einsum("bshk,bshv->bhkv", kw, vt)
+        return S_new, y_inter + y_intra
+
+    final, ys = jax.lax.scan(body, state, (rc, kc, vc, lc))
+    ys = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dk)
+    return ys, final
+
+
+def time_mix_step(p, x1, d_head: int, state, x_last):
+    """Single decode step. x1 [B,1,D]."""
+    r, k, v, g, w, _ = _tm_project(p, x1, x_last, d_head)
+    rt, kt, vt, wt = (a[:, 0].astype(jnp.float32) for a in (r, k, v, w))
+    kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    u = p["bonus_u"]
+    yt = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None][..., None] * kv)
+    S_new = wt[..., None] * state + kv
+    y = _tm_finish(p, yt[:, None], g, x1.dtype)
+    return y, S_new, x1
+
+
+def channel_mix(p, x, x_last=None):
+    from repro.models.shardctx import constrain
+    B, S, D = x.shape
+    if x_last is None:
+        x_last = jnp.zeros((B, 1, D), x.dtype)
+    x_prev = _shift(x, x_last)
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"]).astype(jnp.float32))
+    # keep the w_v output sharded like the gate (reduce-scatter instead of
+    # all-reduce; the gating product stays local) — §Perf pair 3
+    wv = jnp.einsum("bsf,fd->bsd", k, p["w_v"]).astype(jnp.float32)
+    wv = constrain(wv, ("batch", None, "heads"))
+    out = constrain(r * wv, ("batch", None, "heads"))
+    return out.astype(x.dtype), x[:, -1:]
+
+
+__all__ = [
+    "rwkv6_defs", "rwkv6_dims", "time_mix", "time_mix_step", "channel_mix",
+]

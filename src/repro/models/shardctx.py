@@ -1,0 +1,46 @@
+"""Activation-sharding context.
+
+Model code annotates intermediate activations with *logical* axes; the
+launcher installs a mesh + rules so those become
+``with_sharding_constraint`` calls. On a single device (tests) this is a
+no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models.pdefs import DEFAULT_RULES, resolve_axes
+
+_MESH: Optional[Mesh] = None
+_RULES = None
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules=None):
+    global _MESH, _RULES
+    prev = (_MESH, _RULES)
+    _MESH, _RULES = mesh, (rules if rules is not None else DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _MESH, _RULES = prev
+
+
+def constrain(x, logical_axes):
+    """Annotate activation x with logical axes (no-op without a mesh)."""
+    if _MESH is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = resolve_axes(logical_axes, x.shape, _MESH, _RULES)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+__all__ = ["activation_sharding", "constrain", "current_mesh"]

@@ -1,0 +1,118 @@
+"""Segment machinery: a model body is an ordered list of Segments, each a
+homogeneous stack of layers run with lax.scan (scanned-layer params carry a
+leading [n] axis). Caches mirror the segment structure.
+
+Segment contract (all functions are pure):
+  defs()                      -> pytree of ParamDef for ONE layer
+  cache_defs(B, S)            -> pytree of ParamDef for ONE layer's cache (or {})
+  fwd_full(p, x, ctx)         -> (x, cache_entry, aux)   # train/prefill over S
+  fwd_decode(p, x1, ctx, ce)  -> (x1, new_cache_entry, aux)
+
+ctx is a dict with: positions, lengths, memory (image/audio embeddings),
+enc_out, cfg, mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.pdefs import ParamDef, stack, abstract_from_defs
+
+
+@dataclass
+class Segment:
+    """Field order matches the family maker tuples:
+    (defs, fwd_full, fwd_decode, cache_defs)."""
+    name: str
+    n: int
+    defs: Callable[[], Any]
+    fwd_full: Callable
+    fwd_decode: Callable
+    cache_defs: Callable[[int, int], Any]
+    scan: bool = True
+
+
+def segments_param_defs(segments: List[Segment]) -> Dict[str, Any]:
+    out = {}
+    for s in segments:
+        d = s.defs()
+        out[s.name] = stack(d, s.n) if (s.scan and s.n > 1) else d
+    return out
+
+
+def segments_cache_defs(segments: List[Segment], batch: int, seq: int):
+    out = {}
+    for s in segments:
+        cd = s.cache_defs(batch, seq)
+        if not cd:
+            continue
+        out[s.name] = stack(cd, s.n) if (s.scan and s.n > 1) else cd
+    return out
+
+
+def _maybe_remat(fn, do_remat: bool):
+    return jax.checkpoint(fn, prevent_cse=False) if do_remat else fn
+
+
+def run_segments_full(params, x, segments: List[Segment], ctx,
+                      *, want_cache: bool, remat: bool):
+    """Run all segments over a full sequence. Returns (x, cache, aux_sum)."""
+    cache_out = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for s in segments:
+        p = params[s.name]
+        if s.scan and s.n > 1:
+            def body(h, pl, _s=s):
+                h2, ce, aux = _s.fwd_full(pl, h, ctx)
+                ys = (ce, aux) if want_cache else aux
+                return h2, ys
+            body = _maybe_remat(body, remat)
+            x, ys = jax.lax.scan(body, x, p)
+            if want_cache:
+                ces, auxs = ys
+                if ces:
+                    cache_out[s.name] = ces
+                aux_total += jnp.sum(auxs)
+            else:
+                aux_total += jnp.sum(ys)
+        else:
+            fn = _maybe_remat(lambda pl, h, _s=s: _s.fwd_full(pl, h, ctx), remat)
+            x, ce, aux = fn(p, x)
+            if want_cache and ce:
+                cache_out[s.name] = ce
+            aux_total += aux
+    return x, cache_out, aux_total
+
+
+def run_segments_decode(params, x1, segments: List[Segment], ctx, cache):
+    """Single-token step through all segments, updating the cache."""
+    new_cache = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for s in segments:
+        p = params[s.name]
+        ce = cache.get(s.name)
+        if s.scan and s.n > 1:
+            def body(h, args, _s=s):
+                pl, ce_l = args
+                h2, ce2, aux = _s.fwd_decode(pl, h, ctx, ce_l)
+                return h2, (ce2, aux)
+            x1, (ces, auxs) = jax.lax.scan(body, x1, (p, ce))
+            if ces:
+                new_cache[s.name] = ces
+            aux_total += jnp.sum(auxs)
+        else:
+            x1, ce2, aux = s.fwd_decode(p, x1, ctx, ce)
+            if ce2:
+                new_cache[s.name] = ce2
+            aux_total += aux
+    return x1, new_cache, aux_total
+
+
+__all__ = [
+    "Segment", "segments_param_defs", "segments_cache_defs",
+    "run_segments_full", "run_segments_decode",
+]

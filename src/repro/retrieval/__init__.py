@@ -1,0 +1,10 @@
+from repro.retrieval.embedder import (
+    DIM, content_words, cosine, embed, embed_batch, tokenize,
+)
+from repro.retrieval.graph_rag import Community, KnowledgeGraph
+from repro.retrieval.store import Chunk, VectorStore, make_chunk
+
+__all__ = [
+    "DIM", "embed", "embed_batch", "cosine", "tokenize", "content_words",
+    "Chunk", "VectorStore", "make_chunk", "KnowledgeGraph", "Community",
+]

@@ -1,0 +1,70 @@
+"""Deterministic feature-hashing text embedder (offline stand-in for
+'all-MiniLM-L6-v2' — DESIGN.md §9.2).
+
+Word unigrams + bigrams + character trigrams are hashed into a 384-d space
+with signed buckets, then L2-normalized, so cosine similarity behaves like a
+(bag-of-features) semantic similarity. Deterministic across runs/processes.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import Iterable, List, Sequence
+
+import numpy as np
+
+DIM = 384
+_TOKEN_RE = re.compile(r"[a-z0-9']+")
+
+STOPWORDS = frozenset("""
+a an and are as at be by for from has have he her his i if in into is it its
+me my of on or our she so that the their them they this to was we were what
+when where which who will with you your how why does did do done
+""".split())
+
+
+def tokenize(text: str) -> List[str]:
+    return _TOKEN_RE.findall(text.lower())
+
+
+def content_words(text: str) -> List[str]:
+    return [t for t in tokenize(text) if t not in STOPWORDS and len(t) > 2]
+
+
+def _hash(feature: str) -> int:
+    return int.from_bytes(hashlib.md5(feature.encode()).digest()[:8], "little")
+
+
+def _features(text: str) -> Iterable[str]:
+    toks = tokenize(text)
+    for t in toks:
+        if t in STOPWORDS:
+            continue
+        yield "u:" + t
+        for i in range(len(t) - 2):
+            yield "c:" + t[i : i + 3]
+    for a, b in zip(toks, toks[1:]):
+        yield "b:" + a + "_" + b
+
+
+def embed(text: str) -> np.ndarray:
+    v = np.zeros(DIM, np.float32)
+    for f in _features(text):
+        h = _hash(f)
+        v[h % DIM] += 1.0 if (h >> 16) & 1 else -1.0
+    n = np.linalg.norm(v)
+    return v / n if n > 0 else v
+
+
+def embed_batch(texts: Sequence[str]) -> np.ndarray:
+    if not texts:
+        return np.zeros((0, DIM), np.float32)
+    return np.stack([embed(t) for t in texts])
+
+
+def cosine(a: np.ndarray, b: np.ndarray) -> float:
+    return float(np.dot(a, b))
+
+
+__all__ = ["DIM", "embed", "embed_batch", "cosine", "tokenize",
+           "content_words", "STOPWORDS"]

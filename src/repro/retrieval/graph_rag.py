@@ -1,0 +1,194 @@
+"""Cloud-side GraphRAG: entity graph + communities over the full corpus.
+
+Nodes are entities (content words scored by tf-idf-like salience), edges are
+chunk co-occurrences, communities come from synchronous label propagation.
+Retrieval is community-anchored: query keywords are matched to entities
+(embedding cosine > 0.5, as in the paper), communities are ranked by matched
+entities, and the top communities contribute their most relevant chunks —
+the "strong intra-community alignment" that EACO-RAG exploits when it ships
+community chunk subsets to edge nodes.
+"""
+from __future__ import annotations
+
+import math
+from collections import Counter, defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.retrieval.embedder import content_words, embed, embed_batch
+from repro.retrieval.store import Chunk
+
+
+@dataclass
+class Community:
+    cid: int
+    entities: List[str]
+    chunk_ids: List[int]
+    summary_keywords: List[str] = field(default_factory=list)
+
+
+class KnowledgeGraph:
+    def __init__(self, min_entity_count: int = 2, max_entities: int = 4000,
+                 max_df: float = 0.2, seed: int = 0):
+        self.min_entity_count = min_entity_count
+        self.max_entities = max_entities
+        self.max_df = max_df          # drop corpus-gluing ubiquitous terms
+        self.seed = seed
+        self.chunks: List[Chunk] = []
+        self.entities: List[str] = []
+        self.entity_idx: Dict[str, int] = {}
+        self.entity_emb = np.zeros((0, 384), np.float32)
+        self.chunk_entities: List[Set[int]] = []
+        self.adj: Dict[int, Counter] = defaultdict(Counter)
+        self.labels: np.ndarray = np.zeros(0, np.int64)
+        self.communities: Dict[int, Community] = {}
+
+    # ---- construction --------------------------------------------------------
+    def build(self, chunks: Sequence[Chunk]) -> "KnowledgeGraph":
+        self.chunks = list(chunks)
+        counts: Counter = Counter()
+        per_chunk_words: List[List[str]] = []
+        for c in self.chunks:
+            ws = content_words(c.text)
+            per_chunk_words.append(ws)
+            counts.update(set(ws))
+        df_cap = max(int(self.max_df * len(self.chunks)),
+                     self.min_entity_count + 1)
+        vocab = [w for w, n in counts.most_common(self.max_entities)
+                 if self.min_entity_count <= n <= df_cap]
+        self.entities = vocab
+        self.entity_idx = {w: i for i, w in enumerate(vocab)}
+        self.entity_emb = embed_batch(vocab)
+
+        self.chunk_entities = []
+        for ws in per_chunk_words:
+            es = {self.entity_idx[w] for w in ws if w in self.entity_idx}
+            self.chunk_entities.append(es)
+            es_l = sorted(es)
+            for i, a in enumerate(es_l):
+                for b in es_l[i + 1:]:
+                    self.adj[a][b] += 1
+                    self.adj[b][a] += 1
+        self._label_propagation()
+        self._build_communities()
+        return self
+
+    def _label_propagation(self, iters: int = 12):
+        n = len(self.entities)
+        labels = np.arange(n, dtype=np.int64)
+        rng = np.random.default_rng(self.seed)
+        order = np.arange(n)
+        for _ in range(iters):
+            rng.shuffle(order)
+            changed = 0
+            for i in order:
+                if not self.adj[i]:
+                    continue
+                tally: Counter = Counter()
+                for j, w in self.adj[i].items():
+                    tally[labels[j]] += w
+                best = max(tally.items(), key=lambda kv: (kv[1], -kv[0]))[0]
+                if best != labels[i]:
+                    labels[i] = best
+                    changed += 1
+            if changed == 0:
+                break
+        self.labels = labels
+
+    def _build_communities(self):
+        groups: Dict[int, List[int]] = defaultdict(list)
+        for i, l in enumerate(self.labels):
+            groups[int(l)].append(i)
+        self.communities = {}
+        for cid, (_, ents) in enumerate(sorted(groups.items())):
+            ent_set = set(ents)
+            chunk_ids = [ci for ci, es in enumerate(self.chunk_entities)
+                         if es & ent_set]
+            kw = [self.entities[e] for e in ents[:16]]
+            self.communities[cid] = Community(cid, [self.entities[e] for e in ents],
+                                              chunk_ids, kw)
+        self._entity_to_comm = {}
+        cid_of = {}
+        for cid, com in self.communities.items():
+            for e in com.entities:
+                cid_of[e] = cid
+        self._entity_to_comm = cid_of
+
+    # ---- query-side ------------------------------------------------------------
+    def match_entities(self, query: str, sim_threshold: float = 0.5,
+                       max_matches: int = 16) -> List[str]:
+        """Query keywords -> graph entities with cosine > threshold."""
+        if not self.entities:
+            return []
+        qws = content_words(query)
+        out: List[str] = []
+        seen = set()
+        for w in qws:
+            if w in self.entity_idx and w not in seen:
+                out.append(w)           # exact match
+                seen.add(w)
+        if len(out) < max_matches and qws:
+            qe = embed_batch(qws)       # [Q,384]
+            sims = qe @ self.entity_emb.T
+            for qi in range(sims.shape[0]):
+                j = int(np.argmax(sims[qi]))
+                if sims[qi, j] > sim_threshold:
+                    e = self.entities[j]
+                    if e not in seen:
+                        out.append(e)
+                        seen.add(e)
+        return out[:max_matches]
+
+    def rank_communities(self, query: str, top_k: int = 3) -> List[Community]:
+        matched = self.match_entities(query)
+        tally: Counter = Counter()
+        for e in matched:
+            cid = self._entity_to_comm.get(e)
+            if cid is not None:
+                tally[cid] += 1
+        return [self.communities[cid] for cid, _ in tally.most_common(top_k)]
+
+    def retrieve(self, query: str, k: int = 5,
+                 top_communities: int = 3) -> List[Tuple[Chunk, float]]:
+        """Community-anchored retrieval (cloud GraphRAG path)."""
+        comms = self.rank_communities(query, top_communities)
+        cand_ids: List[int] = []
+        seen = set()
+        for com in comms:
+            for ci in com.chunk_ids:
+                if ci not in seen:
+                    cand_ids.append(ci)
+                    seen.add(ci)
+        if not cand_ids:
+            cand_ids = list(range(len(self.chunks)))
+        q = embed(query)
+        cand_emb = embed_batch([self.chunks[i].text for i in cand_ids])
+        sims = cand_emb @ q
+        order = np.argsort(-sims)[:k]
+        return [(self.chunks[cand_ids[int(i)]], float(sims[int(i)]))
+                for i in order]
+
+    def community_chunks_for_queries(self, queries: Sequence[str],
+                                     top_k_communities: int = 3,
+                                     max_chunks: int = 500) -> List[Chunk]:
+        """Adaptive-update extraction: chunks from the communities that best
+        match recent queries (paper §5: up to 500 chunks per update)."""
+        tally: Counter = Counter()
+        for q in queries:
+            for com in self.rank_communities(q, top_k_communities):
+                tally[com.cid] += 1
+        out: List[Chunk] = []
+        seen = set()
+        for cid, _ in tally.most_common():
+            for ci in self.communities[cid].chunk_ids:
+                if ci not in seen:
+                    out.append(self.chunks[ci])
+                    seen.add(ci)
+                if len(out) >= max_chunks:
+                    return out
+        return out
+
+
+__all__ = ["KnowledgeGraph", "Community"]

@@ -1,0 +1,107 @@
+"""Edge vector store: fixed-capacity FIFO chunk store with JAX cosine top-k.
+
+The retrieval scoring (embedding matrix x query) is the RAG hot loop;
+``repro.kernels.retrieval_topk`` provides the fused Pallas kernel, used when
+``use_pallas=True`` (validated in interpret mode on CPU).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.embedder import DIM, content_words, embed, embed_batch
+
+
+@dataclass
+class Chunk:
+    text: str
+    keywords: Tuple[str, ...]
+    source: str = ""
+    topic: str = ""
+    ts: float = 0.0               # ingestion timestamp (for FIFO/audit)
+
+
+from functools import partial
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _topk_scores(emb: jax.Array, q: jax.Array, k: int = 5):
+    scores = emb @ q
+    return jax.lax.top_k(scores, k)
+
+
+class VectorStore:
+    """FIFO chunk store. Capacity mirrors the paper's 1000-chunk edge repo."""
+
+    def __init__(self, capacity: int = 1000, use_pallas: bool = False):
+        self.capacity = capacity
+        self.use_pallas = use_pallas
+        self.chunks: List[Chunk] = []
+        self._emb = np.zeros((0, DIM), np.float32)
+        self._kw_set: set = set()
+        self._kw_dirty = True
+
+    # ---- ingestion (FIFO) ----------------------------------------------------
+    def add(self, chunks: Sequence[Chunk]) -> int:
+        """Append chunks; evict oldest beyond capacity. Returns #evicted."""
+        if not chunks:
+            return 0
+        new_emb = embed_batch([c.text for c in chunks])
+        self.chunks.extend(chunks)
+        self._emb = np.concatenate([self._emb, new_emb]) if len(self._emb) else new_emb
+        evicted = 0
+        if len(self.chunks) > self.capacity:
+            evicted = len(self.chunks) - self.capacity
+            self.chunks = self.chunks[evicted:]
+            self._emb = self._emb[evicted:]
+        self._kw_dirty = True
+        return evicted
+
+    def __len__(self) -> int:
+        return len(self.chunks)
+
+    # ---- keyword index ---------------------------------------------------------
+    @property
+    def keyword_set(self) -> set:
+        if self._kw_dirty:
+            self._kw_set = set()
+            for c in self.chunks:
+                self._kw_set.update(c.keywords)
+            self._kw_dirty = False
+        return self._kw_set
+
+    def overlap_ratio(self, query_keywords: Sequence[str]) -> float:
+        """Fraction of query keywords present in this store (paper §5)."""
+        if not query_keywords:
+            return 0.0
+        ks = self.keyword_set
+        return sum(1 for k in query_keywords if k in ks) / len(query_keywords)
+
+    # ---- retrieval -------------------------------------------------------------
+    def search(self, query: str, k: int = 5) -> List[Tuple[Chunk, float]]:
+        if not self.chunks:
+            return []
+        k = min(k, len(self.chunks))
+        q = jnp.asarray(embed(query))
+        emb = jnp.asarray(self._emb)
+        if self.use_pallas:
+            from repro.kernels.retrieval_topk import ops as rt_ops
+            vals, idx = rt_ops.retrieval_topk(emb, q, k)
+        else:
+            vals, idx = _topk_scores(emb, q, k)
+        vals = np.asarray(vals)
+        idx = np.asarray(idx)
+        return [(self.chunks[int(i)], float(v)) for v, i in zip(vals, idx)]
+
+
+def make_chunk(text: str, source: str = "", topic: str = "",
+               ts: float = 0.0, max_keywords: int = 64) -> Chunk:
+    kws = tuple(sorted(set(content_words(text)))[:max_keywords])
+    return Chunk(text=text, keywords=kws, source=source, topic=topic, ts=ts)
+
+
+__all__ = ["Chunk", "VectorStore", "make_chunk"]

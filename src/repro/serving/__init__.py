@@ -1,0 +1,5 @@
+from repro.serving.engine import GenStats, Request, ServingEngine, make_edge_engine
+from repro.serving.scheduler import Completion, TierScheduler
+
+__all__ = ["ServingEngine", "Request", "GenStats", "make_edge_engine",
+           "TierScheduler", "Completion"]

@@ -1,0 +1,128 @@
+"""Batched serving engine: real JAX prefill + autoregressive decode with a
+KV cache, greedy or temperature sampling. This is the engine that runs at
+edge nodes (reduced SLM) and — in pod deployment — behind the cloud tier.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.api import Model, build_model
+from repro.models.pdefs import abstract_from_defs, init_from_defs
+
+
+@dataclass
+class GenStats:
+    prompt_tokens: int
+    new_tokens: int
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.new_tokens / self.decode_s if self.decode_s > 0 else 0.0
+
+
+@dataclass
+class Request:
+    prompt: str
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 = greedy
+
+
+class ServingEngine:
+    """One model instance serving padded batches."""
+
+    def __init__(self, cfg: ModelConfig, *, max_seq: int = 512,
+                 max_batch: int = 8, seed: int = 0,
+                 params=None):
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.max_batch = max_batch
+        self.tok = ByteTokenizer()
+        assert cfg.vocab >= self.tok.vocab_size, "vocab must cover bytes"
+        self.model = build_model(cfg, max_seq=max_seq)
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+        self._key = jax.random.PRNGKey(seed + 1)
+
+    # ------------------------------------------------------------------
+    def generate(self, requests: Sequence[Request]
+                 ) -> Tuple[List[str], GenStats]:
+        assert 0 < len(requests) <= self.max_batch
+        B = len(requests)
+        enc = [self.tok.encode(r.prompt)[: self.max_seq - 1] for r in requests]
+        max_new = max(r.max_new_tokens for r in requests)
+        max_new = min(max_new, self.max_seq - max(len(e) for e in enc))
+        # pad the prompt block to a q_chunk multiple (blockwise attention);
+        # per-row lengths keep logits/cache writes at the real positions
+        qc = max(self.cfg.q_chunk, 1)
+        longest = max(len(e) for e in enc)
+        pad_len = min(-(-longest // qc) * qc, self.max_seq)
+        tokens, lengths = self.tok.pad_batch(enc, pad_len)
+        tokens = jnp.asarray(tokens)
+        lengths = jnp.asarray(lengths)
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, tokens, None, lengths)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        out_ids = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        positions = np.asarray(lengths)
+        t0 = time.perf_counter()
+        cur = self._sample(logits, requests)
+        for step in range(max_new):
+            for i in range(B):
+                if not done[i]:
+                    tid = int(cur[i])
+                    if tid == self.tok.eos_id:
+                        done[i] = True
+                    else:
+                        out_ids[i].append(tid)
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(cur)[:, None],
+                                         jnp.asarray(positions, jnp.int32))
+            positions = positions + 1
+            cur = self._sample(logits, requests)
+        t_decode = time.perf_counter() - t0
+
+        texts = [self.tok.decode(ids) for ids in out_ids]
+        stats = GenStats(
+            prompt_tokens=int(np.asarray(lengths).sum()),
+            new_tokens=sum(len(i) for i in out_ids),
+            prefill_s=t_prefill, decode_s=t_decode,
+        )
+        return texts, stats
+
+    def _sample(self, logits, requests) -> np.ndarray:
+        temps = np.array([r.temperature for r in requests], np.float32)
+        greedy = np.asarray(jnp.argmax(logits, -1))
+        if (temps <= 0).all():
+            return greedy
+        self._key, sub = jax.random.split(self._key)
+        t = jnp.maximum(jnp.asarray(temps), 1e-4)[:, None]
+        sampled = np.asarray(jax.random.categorical(sub, logits / t, axis=-1))
+        return np.where(temps > 0, sampled, greedy)
+
+
+def make_edge_engine(*, max_seq: int = 512, seed: int = 0) -> ServingEngine:
+    """Default edge SLM: reduced qwen2-0.5b (byte vocab capable)."""
+    from repro.configs import get_config
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    return ServingEngine(cfg, max_seq=max_seq, seed=seed)
+
+
+__all__ = ["ServingEngine", "Request", "GenStats", "make_edge_engine"]

@@ -1,0 +1,83 @@
+"""Request scheduler: arrival queue -> max-batch dispatch with per-tier
+queues (edge engines + cloud engine), FIFO within a tier, oldest-deadline
+first across tiers. This is the host-side batching layer the engines serve
+under; the gate decides the tier, the scheduler packs the batches.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.serving.engine import GenStats, Request, ServingEngine
+
+
+@dataclass(order=True)
+class _Item:
+    deadline: float
+    seq: int
+    request: Request = field(compare=False)
+    tier: str = field(compare=False, default="edge")
+    enqueued_at: float = field(compare=False, default=0.0)
+
+
+@dataclass
+class Completion:
+    request: Request
+    text: str
+    tier: str
+    queue_wait_s: float
+    batch_size: int
+
+
+class TierScheduler:
+    """Batched FIFO scheduler over named engine tiers."""
+
+    def __init__(self, engines: Dict[str, ServingEngine],
+                 max_wait_s: float = 0.05):
+        self.engines = engines
+        self.max_wait_s = max_wait_s
+        self._queues: Dict[str, List[_Item]] = {t: [] for t in engines}
+        self._seq = itertools.count()
+
+    def submit(self, request: Request, tier: str,
+               deadline_s: float = 1e9, now: Optional[float] = None) -> None:
+        if tier not in self._queues:
+            raise KeyError(f"unknown tier {tier!r}")
+        now = time.perf_counter() if now is None else now
+        heapq.heappush(self._queues[tier],
+                       _Item(deadline_s, next(self._seq), request, tier, now))
+
+    def pending(self, tier: Optional[str] = None) -> int:
+        if tier:
+            return len(self._queues[tier])
+        return sum(len(q) for q in self._queues.values())
+
+    def step(self) -> List[Completion]:
+        """Serve one batch from the most-urgent non-empty tier."""
+        tiers = [t for t, q in self._queues.items() if q]
+        if not tiers:
+            return []
+        tier = min(tiers, key=lambda t: self._queues[t][0].deadline)
+        eng = self.engines[tier]
+        q = self._queues[tier]
+        items = [heapq.heappop(q) for _ in range(min(eng.max_batch, len(q)))]
+        now = time.perf_counter()
+        texts, stats = eng.generate([it.request for it in items])
+        return [
+            Completion(it.request, text, tier,
+                       queue_wait_s=max(now - it.enqueued_at, 0.0),
+                       batch_size=len(items))
+            for it, text in zip(items, texts)
+        ]
+
+    def drain(self) -> List[Completion]:
+        out: List[Completion] = []
+        while self.pending():
+            out.extend(self.step())
+        return out
+
+
+__all__ = ["TierScheduler", "Completion"]

@@ -1,0 +1,8 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from repro.training.steps import (
+    init_train_state, make_decode_step, make_prefill_step, make_train_step,
+)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "lr_schedule",
+           "make_train_step", "make_prefill_step", "make_decode_step",
+           "init_train_state"]

@@ -1,0 +1,70 @@
+"""Checkpointing: msgpack-serialized pytrees (params + optimizer state).
+
+Arrays are stored as (dtype, shape, raw bytes); the tree structure is
+reconstructed against a template pytree on load, so sharded/replicated
+restore just requires re-placing leaves.
+"""
+from __future__ import annotations
+
+import io
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import msgpack
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _pack_leaf(x) -> Dict[str, Any]:
+    a = np.asarray(x)
+    return {"dtype": a.dtype.name, "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_leaf(d) -> np.ndarray:
+    return np.frombuffer(d["data"], dtype=_np_dtype(d["dtype"])).reshape(
+        d["shape"])
+
+
+def save_checkpoint(path: str, params, opt_state=None,
+                    meta: Optional[dict] = None) -> None:
+    leaves_p, treedef_p = jax.tree.flatten(params)
+    payload = {
+        "params": [_pack_leaf(l) for l in leaves_p],
+        "meta": meta or {},
+    }
+    if opt_state is not None:
+        leaves_o, _ = jax.tree.flatten(opt_state)
+        payload["opt_state"] = [_pack_leaf(l) for l in leaves_o]
+    Path(path).parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+
+def load_checkpoint(path: str, params_template, opt_template=None
+                    ) -> Tuple[Any, Any, dict]:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_p, treedef_p = jax.tree.flatten(params_template)
+    restored_p = [jnp.asarray(_unpack_leaf(d), l.dtype)
+                  for d, l in zip(payload["params"], leaves_p)]
+    params = treedef_p.unflatten(restored_p)
+    opt_state = None
+    if opt_template is not None and "opt_state" in payload:
+        leaves_o, treedef_o = jax.tree.flatten(opt_template)
+        restored_o = [jnp.asarray(_unpack_leaf(d), l.dtype)
+                      for d, l in zip(payload["opt_state"], leaves_o)]
+        opt_state = treedef_o.unflatten(restored_o)
+    return params, opt_state, payload["meta"]
+
+
+__all__ = ["save_checkpoint", "load_checkpoint"]

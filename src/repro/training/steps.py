@@ -1,0 +1,50 @@
+"""jit-able train / prefill / decode step builders used by the launcher,
+the serving engine and the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.train_loss(p, batch)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, tokens, memory=None):
+        return model.prefill(params, tokens, memory)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens1, positions):
+        return model.decode_step(params, cache, tokens1, positions)
+    return decode_step
+
+
+def init_train_state(model: Model, key):
+    params = model.init(key)
+    return params, adamw_init(params)
+
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "init_train_state"]

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# tests run on ONE device (the dry-run, and only the dry-run, forces 512)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,107 @@
+"""Attention-layer properties: blockwise==naive, sliding windows, RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (
+    apply_rope, causal_attention, decode_attention,
+)
+
+
+def _naive_causal(q, k, v, n_kv, window=0):
+    B, S, H, hd = q.shape
+    G = H // n_kv
+    qg = q.reshape(B, S, n_kv, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf) / np.sqrt(hd)
+    i = jnp.arange(S)
+    mask = i[None, :] <= i[:, None]
+    if window:
+        mask &= i[None, :] > (i[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd)
+
+
+@pytest.mark.parametrize("S,q_chunk,window", [
+    (64, 64, 0), (128, 32, 0), (128, 32, 48), (96, 48, 16), (256, 64, 64),
+])
+def test_blockwise_equals_naive(S, q_chunk, window):
+    B, H, KV, hd = 2, 4, 2, 32
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+    out = causal_attention(q, k, v, n_kv=KV, window=window, q_chunk=q_chunk)
+    ref = _naive_causal(q, k, v, KV, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_matches_last_row_of_full():
+    B, S, H, KV, hd = 2, 48, 4, 2, 32
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, S, KV, hd))
+    full = _naive_causal(q, k, v, KV)
+    dec = decode_attention(q[:, -1], k, v, jnp.full((B,), S), n_kv=KV)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ring_buffer_decode_equals_windowed():
+    """Ring-buffer cache (slot=pos%W) must give the same softmax as a
+    windowed full cache (order independence)."""
+    B, H, KV, hd, W = 1, 2, 1, 16, 8
+    total = 20
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.normal(key, (total, KV, hd))
+    vs = jax.random.normal(jax.random.PRNGKey(7), (total, KV, hd))
+    q = jax.random.normal(jax.random.PRNGKey(8), (B, H, hd))
+    # windowed reference over the last W tokens
+    pos = total - 1
+    lo = pos - W + 1
+    k_ref = ks[None, lo : pos + 1]
+    v_ref = vs[None, lo : pos + 1]
+    ref = decode_attention(q, k_ref, v_ref, jnp.array([W]), n_kv=KV)
+    # ring cache
+    ring_k = jnp.zeros((B, W, KV, hd))
+    ring_v = jnp.zeros((B, W, KV, hd))
+    for p in range(total):
+        ring_k = ring_k.at[0, p % W].set(ks[p])
+        ring_v = ring_v.at[0, p % W].set(vs[p])
+    out = decode_attention(q, ring_k, ring_v, jnp.array([total]),
+                           n_kv=KV, window=W, ring=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 500))
+def test_rope_preserves_norm(dim_half, pos):
+    d = dim_half * 2
+    x = jnp.arange(1, d + 1, dtype=jnp.float32).reshape(1, 1, 1, d)
+    y = apply_rope(x, jnp.array([[pos]]), 10000.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 64), st.integers(1, 64))
+def test_rope_relative_property(p0, delta):
+    """<rope(q,p0+d), rope(k,p0)> depends only on d, not p0."""
+    d = 16
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(12), (1, 1, 1, d))
+
+    def score(p):
+        qr = apply_rope(q, jnp.array([[p + delta]]), 1000.0)
+        kr = apply_rope(k, jnp.array([[p]]), 1000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(p0) - score(p0 + 37)) < 1e-3

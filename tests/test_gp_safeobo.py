@@ -1,0 +1,137 @@
+"""GP regression + SafeOBO invariants (unit + property-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gp import (
+    GPHypers, gp_add, gp_init, gp_log_marginal, gp_posterior, rbf,
+)
+from repro.core.safeobo import SafeOBO, SafeOBOConfig
+
+
+def _fill(gp, X, y):
+    for xi, yi in zip(X, y):
+        gp = gp_add(gp, jnp.asarray(xi), float(yi))
+    return gp
+
+
+def test_gp_interpolates_noise_free():
+    X = np.random.default_rng(0).normal(size=(20, 3)).astype(np.float32)
+    y = np.sin(X.sum(1))
+    gp = _fill(gp_init(64, 3), X, y)
+    mu, sd = gp_posterior(gp, jnp.asarray(X), 1.0, 1.0, 1e-4)
+    np.testing.assert_allclose(np.asarray(mu), y, atol=0.05)
+    assert float(sd.max()) < 0.1
+
+
+def test_gp_uncertainty_grows_away_from_data():
+    X = np.zeros((10, 2), np.float32)
+    y = np.ones(10, np.float32)
+    gp = _fill(gp_init(32, 2), X, y)
+    q = jnp.asarray([[0.0, 0.0], [5.0, 5.0]])
+    mu, sd = gp_posterior(gp, q, 1.0, 1.0, 0.05)
+    assert float(sd[1]) > float(sd[0]) * 3
+    assert abs(float(mu[1])) < 0.1          # reverts to prior mean
+
+
+def test_gp_empty_slots_do_not_matter():
+    """Posterior must be identical whether the buffer is tight or padded."""
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(8, 2)).astype(np.float32)
+    y = rng.normal(size=8).astype(np.float32)
+    g_small = _fill(gp_init(8, 2), X, y)
+    g_big = _fill(gp_init(64, 2), X, y)
+    q = jnp.asarray(rng.normal(size=(5, 2)).astype(np.float32))
+    m1, s1 = gp_posterior(g_small, q, 1.3, 1.0, 0.05)
+    m2, s2 = gp_posterior(g_big, q, 1.3, 1.0, 0.05)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+
+def test_gp_ring_overwrite():
+    gp = gp_init(4, 1)
+    for i in range(10):
+        gp = gp_add(gp, jnp.asarray([float(i)]), float(i))
+    assert int(gp.count) == 10
+    # buffer holds the last 4 observations (6,7,8,9) in ring order
+    assert sorted(np.asarray(gp.y).tolist()) == [6.0, 7.0, 8.0, 9.0]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.3, 3.0), st.floats(0.2, 2.0))
+def test_rbf_kernel_psd(ls, sv):
+    X = jnp.asarray(np.random.default_rng(2).normal(size=(12, 4)),
+                    jnp.float32)
+    K = rbf(X, X, GPHypers(ls, sv, 0.0)) + 1e-5 * jnp.eye(12)
+    evs = np.linalg.eigvalsh(np.asarray(K))
+    assert evs.min() > -1e-5
+
+
+# ---------------------------------------------------------------------------
+# SafeOBO on a synthetic contextual bandit
+# ---------------------------------------------------------------------------
+
+class _SyntheticEnv:
+    """Arm 0 cheap but unsafe on 'hard' contexts; arm 1 mid; arm 2 safe."""
+    COST = [1.0, 10.0, 100.0]
+
+    def __init__(self, seed=0):
+        self.rng = np.random.default_rng(seed)
+
+    def ctx(self):
+        hard = self.rng.random() < 0.5
+        # informative feature ARD-stretched (as context_features does) so the
+        # fixed accuracy-GP lengthscale can separate the two regimes
+        return np.array([6.0 if hard else 0.0, self.rng.random()],
+                        np.float32), hard
+
+    def play(self, arm, hard):
+        acc_p = {0: 0.99 if not hard else 0.3, 1: 0.97, 2: 0.995}[arm]
+        acc = float(self.rng.random() < acc_p)
+        delay = {0: 0.3, 1: 1.0, 2: 2.0}[arm]
+        return self.COST[arm], acc, delay
+
+
+def test_safeobo_learns_context_dependent_policy():
+    env = _SyntheticEnv()
+    obo = SafeOBO(SafeOBOConfig(
+        n_arms=3, context_dim=2, warmup_steps=200, capacity=256,
+        qos_min_acc=0.80, qos_max_delay=5.0, safe_seed_arm=2,
+        cost_scale=100.0), seed=0)
+    picks_easy, picks_hard = [], []
+    for t in range(600):
+        ctx, hard = env.ctx()
+        arm, info = obo.select(ctx)
+        cost, acc, delay = env.play(arm, hard)
+        obo.update(ctx, arm, cost=cost, accuracy=acc, delay=delay)
+        if t >= 450:
+            (picks_hard if hard else picks_easy).append(arm)
+    # on easy contexts the cheap arm should dominate
+    assert np.mean([a == 0 for a in picks_easy]) > 0.6, picks_easy
+    # on hard contexts arm 0 must be avoided
+    assert np.mean([a == 0 for a in picks_hard]) < 0.15, picks_hard
+
+
+def test_safeobo_warmup_is_random_then_stops():
+    obo = SafeOBO(SafeOBOConfig(n_arms=4, context_dim=2, warmup_steps=20),
+                  seed=1)
+    ctx = np.zeros(2, np.float32)
+    for t in range(20):
+        assert obo.in_warmup
+        arm, info = obo.select(ctx)
+        assert info["phase"] == "warmup"
+        obo.update(ctx, arm, cost=1.0, accuracy=1.0, delay=0.1)
+    assert not obo.in_warmup
+    _, info = obo.select(ctx)
+    assert info["phase"] == "exploit"
+
+
+def test_safeobo_seed_arm_always_safe():
+    obo = SafeOBO(SafeOBOConfig(n_arms=3, context_dim=2, warmup_steps=0,
+                                safe_seed_arm=2, qos_min_acc=0.999,
+                                qos_max_delay=0.001), seed=2)
+    arm, info = obo.select(np.zeros(2, np.float32))
+    assert 2 in info["safe"]
+    assert arm == 2      # nothing else can be safe under impossible QoS

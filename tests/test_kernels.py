@@ -1,0 +1,85 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.retrieval_topk.kernel import retrieval_topk_pallas
+from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
+from repro.kernels.rbf.kernel import rbf_matrix_pallas
+from repro.kernels.rbf.ref import rbf_matrix_ref
+
+
+@pytest.mark.parametrize("B,H,KV,hd,S,block_s", [
+    (1, 4, 1, 64, 128, 64),
+    (2, 8, 2, 128, 512, 128),
+    (3, 14, 2, 64, 256, 256),      # qwen2-0.5b geometry
+    (2, 8, 4, 256, 384, 128),      # gemma3 geometry
+    (1, 16, 16, 128, 512, 512),    # MHA, single block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, H, KV, hd, S, block_s, dtype):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(42), 4)
+    q = jax.random.normal(k1, (B, H, hd), dtype)
+    k = jax.random.normal(k2, (B, S, KV, hd), dtype)
+    v = jax.random.normal(k3, (B, S, KV, hd), dtype)
+    lengths = jax.random.randint(k4, (B,), 1, S + 1)
+    out = decode_attention_pallas(q, k, v, lengths, block_s=block_s)
+    ref = decode_attention_ref(q, k, v, lengths)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_decode_attention_length_mask_strict():
+    """Cache contents beyond `length` must not influence the output."""
+    B, H, KV, hd, S = 1, 4, 2, 64, 128
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+    lengths = jnp.array([40])
+    out1 = decode_attention_pallas(q, k, v, lengths)
+    k2 = k.at[:, 40:].set(999.0)
+    v2 = v.at[:, 40:].set(-999.0)
+    out2 = decode_attention_pallas(q, k2, v2, lengths)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+@pytest.mark.parametrize("N,D,k,block_n,n_valid", [
+    (100, 384, 5, 64, None),
+    (1000, 384, 5, 256, 900),
+    (513, 128, 8, 512, 513),
+    (64, 384, 3, 64, 10),
+    (2048, 256, 1, 512, None),
+])
+def test_retrieval_topk_sweep(N, D, k, block_n, n_valid):
+    key = jax.random.PRNGKey(7)
+    emb = jax.random.normal(key, (N, D), jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(8), (D,), jnp.float32)
+    v, i = retrieval_topk_pallas(emb, q, k, block_n=block_n, n_valid=n_valid)
+    vr, ir = retrieval_topk_ref(emb, q, k, n_valid=n_valid)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=1e-4)
+    assert (np.asarray(i) == np.asarray(ir)).all()
+
+
+@pytest.mark.parametrize("M,N,D", [(10, 10, 7), (300, 200, 11),
+                                   (128, 128, 384), (257, 65, 16)])
+@pytest.mark.parametrize("ls,sv", [(1.0, 1.0), (0.5, 2.0), (3.0, 0.25)])
+def test_rbf_sweep(M, N, D, ls, sv):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x1 = jax.random.normal(k1, (M, D))
+    x2 = jax.random.normal(k2, (N, D))
+    K = rbf_matrix_pallas(x1, x2, ls, sv)
+    Kr = rbf_matrix_ref(x1, x2, ls, sv)
+    np.testing.assert_allclose(np.asarray(K), np.asarray(Kr),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rbf_diagonal_is_signal_var():
+    x = jax.random.normal(jax.random.PRNGKey(0), (50, 9))
+    K = rbf_matrix_pallas(x, x, 1.7, 0.8)
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(K)), 0.8, atol=1e-5)

@@ -1,0 +1,127 @@
+"""Retrieval substrate: embedder, store FIFO, overlap, GraphRAG, updates."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.edge_assist import query_keywords, select_edge
+from repro.core.knowledge import AdaptiveKnowledgeUpdater, KnowledgeUpdateConfig
+from repro.data.corpus import wiki_like
+from repro.retrieval.embedder import embed, embed_batch, cosine
+from repro.retrieval.graph_rag import KnowledgeGraph
+from repro.retrieval.store import VectorStore, make_chunk
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return wiki_like(seed=0)
+
+
+def test_embedder_deterministic_and_normalized():
+    e1 = embed("the amber falcon guards the harbor")
+    e2 = embed("the amber falcon guards the harbor")
+    np.testing.assert_array_equal(e1, e2)
+    assert abs(np.linalg.norm(e1) - 1.0) < 1e-5
+
+
+def test_embedder_similarity_ordering():
+    a = embed("the capital of france is paris")
+    b = embed("paris is the capital city of france")
+    c = embed("quantum chromodynamics lattice simulation")
+    assert cosine(a, b) > cosine(a, c) + 0.2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.text(alphabet="abcdefg hij", min_size=1, max_size=60))
+def test_embedder_never_nan(text):
+    v = embed(text)
+    assert np.isfinite(v).all()
+
+
+def test_store_fifo_capacity():
+    store = VectorStore(capacity=10)
+    chunks = [make_chunk(f"fact number {i} about entity{i}") for i in range(25)]
+    evicted = store.add(chunks)
+    assert len(store) == 10
+    assert evicted == 15
+    # the newest chunks survive
+    assert store.chunks[-1].text == chunks[-1].text
+    assert store.chunks[0].text == chunks[15].text
+
+
+def test_store_search_finds_relevant(corpus):
+    store = VectorStore(capacity=2000)
+    store.add(corpus.chunks)
+    fact = corpus.facts[0]
+    q = f"What is the {fact.attr} of {fact.entity}?"
+    results = store.search(q, k=5)
+    assert any(fact.value in c.text for c, _ in results), "gold chunk in top-5"
+
+
+def test_overlap_ratio_bounds(corpus):
+    store = VectorStore(capacity=2000)
+    store.add(corpus.chunks[:20])
+    kws = query_keywords(corpus.qa[0].question)
+    r = store.overlap_ratio(kws)
+    assert 0.0 <= r <= 1.0
+    assert store.overlap_ratio([]) == 0.0
+
+
+def test_select_edge_prefers_coverage(corpus):
+    t0, t1 = corpus.topics[0], corpus.topics[1]
+    s0, s1 = VectorStore(500), VectorStore(500)
+    s0.add(corpus.chunks_for_topic(t0))
+    s1.add(corpus.chunks_for_topic(t1))
+    qa = next(q for q in corpus.qa if q.topic == t1 and not q.multihop)
+    sel = select_edge({"e0": s0, "e1": s1}, qa.question)
+    assert sel.edge_id == "e1"
+    assert sel.overlap > 0.4
+
+
+def test_graph_communities_cover_chunks(corpus):
+    g = KnowledgeGraph(seed=0).build(corpus.chunks)
+    assert len(g.communities) >= 2
+    covered = set()
+    for com in g.communities.values():
+        covered.update(com.chunk_ids)
+    assert len(covered) >= 0.9 * len(corpus.chunks)
+
+
+def test_graph_retrieval_hits_gold(corpus):
+    g = KnowledgeGraph(seed=0).build(corpus.chunks)
+    hits = 0
+    singles = [q for q in corpus.qa if not q.multihop][:40]
+    for qa in singles:
+        res = g.retrieve(qa.question, k=10)
+        hits += any(qa.answer in c.text for c, _ in res)
+    assert hits / len(singles) > 0.6
+
+
+def test_adaptive_update_trigger(corpus):
+    g = KnowledgeGraph(seed=0).build(corpus.chunks)
+    upd = AdaptiveKnowledgeUpdater(g, KnowledgeUpdateConfig(
+        update_trigger=5, max_chunks_per_update=50))
+    store = VectorStore(capacity=100)
+    fired = []
+    for i, qa in enumerate(corpus.qa[:12]):
+        fired.append(upd.observe_query("e0", qa.question, store))
+    assert sum(fired) == 2                    # every 5 queries
+    assert len(store) > 0
+    st_ = upd.stats["e0"]
+    assert st_.updates == 2
+    assert st_.chunks_shipped <= 100
+
+
+def test_update_improves_coverage(corpus):
+    """After updates driven by topic-X queries, the store covers topic X."""
+    g = KnowledgeGraph(seed=0).build(corpus.chunks)
+    upd = AdaptiveKnowledgeUpdater(g, KnowledgeUpdateConfig(
+        update_trigger=5, max_chunks_per_update=200))
+    store = VectorStore(capacity=400)
+    topic = corpus.topics[2]
+    qs = [q for q in corpus.qa if q.topic == topic][:10]
+    before = store.overlap_ratio(query_keywords(qs[-1].question))
+    for qa in qs:
+        upd.observe_query("e0", qa.question, store)
+    after = store.overlap_ratio(query_keywords(qs[-1].question))
+    assert after > before
+    assert after > 0.5

@@ -1,0 +1,34 @@
+"""Serving scheduler behaviour."""
+import pytest
+
+from repro.serving.engine import Request, make_edge_engine
+from repro.serving.scheduler import TierScheduler
+
+
+@pytest.fixture(scope="module")
+def sched():
+    edge = make_edge_engine(max_seq=96, seed=0)
+    return TierScheduler({"edge": edge})
+
+
+def test_batching_respects_max_batch(sched):
+    for i in range(11):
+        sched.submit(Request(f"query number {i}", max_new_tokens=2), "edge")
+    done = sched.step()
+    assert len(done) == sched.engines["edge"].max_batch
+    assert sched.pending() == 11 - len(done)
+    rest = sched.drain()
+    assert sched.pending() == 0
+    assert len(done) + len(rest) == 11
+
+
+def test_deadline_priority(sched):
+    sched.submit(Request("late", max_new_tokens=2), "edge", deadline_s=10.0)
+    sched.submit(Request("urgent", max_new_tokens=2), "edge", deadline_s=1.0)
+    done = sched.drain()
+    assert done[0].request.prompt == "urgent"
+
+
+def test_unknown_tier_rejected(sched):
+    with pytest.raises(KeyError):
+        sched.submit(Request("x"), "nonexistent")

@@ -1,0 +1,101 @@
+"""SSM correctness: chunked scans vs exact per-step recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SSMConfig
+from repro.models.mamba2 import mamba2_defs, mamba2_dims, mamba2_scan, mamba2_step
+from repro.models.pdefs import init_from_defs
+from repro.models.rwkv6 import (
+    channel_mix, rwkv6_defs, time_mix, time_mix_step,
+)
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16), (48, 48)])
+def test_mamba2_chunked_equals_stepwise(S, chunk):
+    d = 32
+    s = SSMConfig(d_state=8, d_head=16, expand=2, conv_width=4, chunk=chunk)
+    defs = mamba2_defs(d, s, jnp.float32)
+    params = init_from_defs(defs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, S, d)) * 0.5
+
+    y_scan, final = mamba2_scan(params, x, s)
+
+    # exact sequential reference via mamba2_step
+    d_in, H = mamba2_dims(d, s)
+    state = jnp.zeros((2, H, s.d_head, s.d_state), jnp.float32)
+    conv = jnp.zeros((2, s.conv_width - 1, d_in + 2 * s.d_state), jnp.float32)
+    outs = []
+    for t in range(S):
+        y1, state, conv = mamba2_step(params, x[:, t : t + 1], s, state, conv)
+        outs.append(y1)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_seq),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(state),
+                               atol=2e-4, rtol=2e-3)
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 32), (64, 64)])
+def test_rwkv_chunked_equals_sequential(S, chunk):
+    d, d_head = 32, 16
+    defs = rwkv6_defs(d, 64, d_head, jnp.float32)
+    params = init_from_defs(defs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, S, d)) * 0.5
+    y_seq, S_seq, _ = time_mix(params["tm"], x, d_head, chunk=1)
+    y_chk, S_chk, _ = time_mix(params["tm"], x, d_head, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_chk),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(S_seq), np.asarray(S_chk),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_rwkv_fullseq_equals_stepwise():
+    d, d_head, S = 32, 16, 24
+    defs = rwkv6_defs(d, 64, d_head, jnp.float32)
+    params = init_from_defs(defs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, S, d)) * 0.5
+    y_full, S_full, _ = time_mix(params["tm"], x, d_head)
+    H = d // d_head
+    state = jnp.zeros((1, H, d_head, d_head), jnp.float32)
+    x_last = jnp.zeros((1, 1, d), x.dtype)
+    outs = []
+    for t in range(S):
+        y1, state, x_last = time_mix_step(params["tm"], x[:, t : t + 1],
+                                          d_head, state, x_last)
+        outs.append(y1)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_seq),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(S_full), np.asarray(state),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_channel_mix_shift_consistency():
+    d = 16
+    defs = rwkv6_defs(d, 32, 8, jnp.float32)
+    params = init_from_defs(defs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 6, d))
+    y_full, _ = channel_mix(params["cm"], x)
+    # stepwise with explicit shift state
+    x_last = jnp.zeros((1, 1, d))
+    outs = []
+    for t in range(6):
+        y1, x_last = channel_mix(params["cm"], x[:, t : t + 1], x_last)
+        outs.append(y1)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_mamba2_decay_bounded():
+    """All SSD decay exponentials must stay in (0, 1] (numerical safety)."""
+    d = 32
+    s = SSMConfig(d_state=8, d_head=16, chunk=16)
+    defs = mamba2_defs(d, s, jnp.float32)
+    params = init_from_defs(defs, jax.random.PRNGKey(5))
+    x = 10.0 * jax.random.normal(jax.random.PRNGKey(6), (1, 64, d))
+    y, final = mamba2_scan(params, x, s)
+    assert bool(jnp.isfinite(y).all())
+    assert bool(jnp.isfinite(final).all())
