@@ -1,0 +1,17 @@
+# Repo task runner. `make test` is the tier-1 gate (see ROADMAP.md).
+PY ?= python
+export PYTHONPATH := src:.
+
+.PHONY: test bench-smoke bench-serving
+
+test:
+	$(PY) -m pytest -x -q
+
+# tiny-size benchmark smoke: serving (static vs continuous) + kernels
+bench-smoke:
+	$(PY) benchmarks/serving_bench.py --smoke --check
+	$(PY) -c "from benchmarks.kernels_bench import run; run(quick=True)"
+
+# full-size serving benchmark with the >=1.5x acceptance check
+bench-serving:
+	$(PY) benchmarks/serving_bench.py --check

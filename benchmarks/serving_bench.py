@@ -1,0 +1,142 @@
+"""Serving benchmark: static vs continuous batching on a mixed-length stream.
+
+A single engine (reduced qwen2-0.5b, byte tokenizer) serves the SAME
+request set — prompt lengths 8..200, max_new_tokens 4..64 — two ways:
+
+* static   — requests are chunked into rigid batches of ``max_batch``; each
+             batch blocks until its longest sequence finishes (head-of-line
+             blocking), exactly the seed engine's behaviour.
+* continuous — a TierScheduler streams requests through the engine's slot
+             pool, admitting a queued request the moment a slot frees.
+
+Both paths share the engine's fixed-shape jitted functions (warmed up
+before timing), so the measured delta is pure scheduling: slot reuse vs
+batch barriers. Reports tokens/s and p50/p95 request latency, plus the
+decode-step trace count, which must stay at 1 across the whole run.
+
+Usage:  PYTHONPATH=src:. python benchmarks/serving_bench.py [--smoke] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serving import Request, TierScheduler, make_edge_engine
+
+
+def mixed_workload(n: int, seed: int, min_prompt=8, max_prompt=200,
+                   min_new=4, max_new=64):
+    """Serving-shaped mix: lengths are log-uniform over the given ranges
+    (heavy-tailed, like real chat traffic — many short requests, a long
+    tail), which is what makes static batching pay for head-of-line
+    blocking."""
+    rng = np.random.default_rng(seed)
+
+    def log_uniform(lo, hi):
+        return int(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+
+    reqs = []
+    for i in range(n):
+        plen = log_uniform(min_prompt, max_prompt)
+        new = log_uniform(min_new, max_new)
+        # byte tokenizer: prompt length in tokens == chars + BOS
+        reqs.append(Request("q" * plen, max_new_tokens=new))
+    return reqs
+
+
+def run_static(eng, reqs):
+    """Rigid batches of max_batch; per-request latency = its batch's end."""
+    lat = []
+    tokens = 0
+    t0 = time.perf_counter()
+    for i in range(0, len(reqs), eng.max_batch):
+        _, stats = eng.generate_static(reqs[i:i + eng.max_batch])
+        t_batch = time.perf_counter() - t0
+        lat.extend([t_batch] * min(eng.max_batch, len(reqs) - i))
+        tokens += stats.new_tokens
+    return tokens, time.perf_counter() - t0, lat
+
+
+def run_continuous(eng, reqs):
+    """All requests queued up front; the scheduler keeps the lanes full."""
+    sched = TierScheduler({"edge": eng})
+    t0 = time.perf_counter()
+    for r in reqs:
+        sched.submit(r, "edge")
+    lat = []
+    tokens = 0
+    while sched.pending() or sched.in_flight():
+        for c in sched.pump():
+            lat.append(time.perf_counter() - t0)
+            tokens += c.new_tokens
+    return tokens, time.perf_counter() - t0, lat
+
+
+def run(quick: bool = False, n_requests: int = 64, max_batch: int = 8,
+        max_seq: int = 384, seed: int = 0, check: bool = False):
+    if quick:
+        n_requests, max_batch, max_seq = 10, 4, 128
+    eng = make_edge_engine(max_seq=max_seq, max_batch=max_batch, seed=0)
+    kw = dict(max_prompt=min(200, max_seq - 70)) if max_seq < 280 else {}
+    reqs = mixed_workload(n_requests, seed, **kw)
+    # compile everything (decode/sample/insert + every prefill bucket) so the
+    # timed phases compare scheduling, not tracing
+    eng.warmup(len(eng.tok.encode(r.prompt)) for r in reqs)
+    traces0 = dict(eng.trace_counts)
+
+    tok_s, wall_s, lat_s = run_static(eng, reqs)
+    tok_c, wall_c, lat_c = run_continuous(eng, reqs)
+    retraces = eng.trace_counts["decode"] - traces0["decode"]
+
+    def row(name, tokens, wall, lat):
+        return {
+            "name": name,
+            "requests": len(lat),
+            "new_tokens": tokens,
+            "tokens_per_s": round(tokens / wall, 1),
+            "wall_s": round(wall, 2),
+            "p50_latency_s": round(float(np.percentile(lat, 50)), 2),
+            "p95_latency_s": round(float(np.percentile(lat, 95)), 2),
+        }
+
+    speedup = (tok_c / wall_c) / (tok_s / wall_s)
+    rows = [
+        row("static", tok_s, wall_s, lat_s),
+        row("continuous", tok_c, wall_c, lat_c),
+        {"name": "summary", "throughput_speedup": round(speedup, 2),
+         "decode_retraces_after_warmup": retraces,
+         "decode_traces_total": eng.decode_traces},
+    ]
+    emit(rows, "serving_bench")
+    if check:
+        # tiny smoke runs are noisy: only the full-size bench gates on 1.5x
+        need = 1.0 if quick else 1.5
+        ok = speedup >= need and retraces == 0 and tok_s == tok_c
+        if not ok:
+            print(f"CHECK FAILED: speedup={speedup:.2f} (need >={need}), "
+                  f"retraces={retraces} (need 0), "
+                  f"tokens {tok_s} vs {tok_c} (must match)")
+            sys.exit(1)
+        print(f"CHECK OK: speedup={speedup:.2f} (>={need}), zero decode "
+              f"retraces, token counts match")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke runs")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=384)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless speedup >= 1.5x with zero "
+                         "decode retraces")
+    args = ap.parse_args()
+    run(quick=args.smoke, n_requests=args.requests, max_batch=args.max_batch,
+        max_seq=args.max_seq, seed=args.seed, check=args.check)

@@ -1,8 +1,13 @@
-"""Serving launcher: batched generation on a (reduced) arch, or the full
-tiered EACO cluster demo (examples/serve_cluster.py drives the latter).
+"""Serving launcher: continuous-batching generation on a (reduced) arch, or
+the full tiered EACO cluster demo (examples/serve_cluster.py drives the
+latter).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --prompts "hello world" "what is rag"
+
+The engine streams any number of prompts through a fixed pool of
+``--max-batch`` KV-cache slots; pass ``--static`` to run the blocking
+static-batch baseline instead (one padded batch at a time).
 """
 from __future__ import annotations
 
@@ -16,8 +21,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--static", action="store_true",
+                    help="static-batch baseline instead of continuous")
     ap.add_argument("--prompts", nargs="+",
                     default=["What is the capital of France?"])
     args = ap.parse_args()
@@ -25,16 +33,30 @@ def main():
     cfg = get_config(args.arch, reduced=True)
     if cfg.vocab < 300:
         raise SystemExit("arch vocab too small for byte tokenizer")
-    eng = ServingEngine(cfg, max_seq=args.max_seq, max_batch=len(args.prompts))
+    eng = ServingEngine(cfg, max_seq=args.max_seq, max_batch=args.max_batch)
     print(f"serving {cfg.arch_id} (reduced, {eng.model.n_params():,} params, "
           f"random weights — output is noise; the engine is real)")
     reqs = [Request(p, max_new_tokens=args.max_new,
                     temperature=args.temperature) for p in args.prompts]
-    texts, stats = eng.generate(reqs)
+    if args.static:
+        from repro.serving.engine import GenStats
+        texts, chunks = [], []
+        for i in range(0, len(reqs), eng.max_batch):
+            ts, st = eng.generate_static(reqs[i:i + eng.max_batch])
+            texts.extend(ts)
+            chunks.append(st)
+        stats = GenStats(sum(s.prompt_tokens for s in chunks),
+                         sum(s.new_tokens for s in chunks),
+                         sum(s.prefill_s for s in chunks),
+                         sum(s.decode_s for s in chunks))
+    else:
+        texts, stats = eng.generate(reqs)
     for p, t in zip(args.prompts, texts):
         print(f"> {p!r}\n  -> {t!r}")
-    print(f"prefill {stats.prefill_s*1e3:.0f}ms, "
-          f"{stats.new_tokens} tokens at {stats.tokens_per_s:.1f} tok/s")
+    mode = "static" if args.static else "continuous"
+    print(f"[{mode}] prefill {stats.prefill_s*1e3:.0f}ms, "
+          f"{stats.new_tokens} tokens at {stats.tokens_per_s:.1f} tok/s; "
+          f"traces: {eng.trace_counts}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,7 @@
-from repro.serving.engine import GenStats, Request, ServingEngine, make_edge_engine
+from repro.serving.engine import (
+    EngineCompletion, GenStats, Request, ServingEngine, make_edge_engine,
+)
 from repro.serving.scheduler import Completion, TierScheduler
 
-__all__ = ["ServingEngine", "Request", "GenStats", "make_edge_engine",
-           "TierScheduler", "Completion"]
+__all__ = ["ServingEngine", "Request", "GenStats", "EngineCompletion",
+           "make_edge_engine", "TierScheduler", "Completion"]

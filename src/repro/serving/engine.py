@@ -1,12 +1,37 @@
-"""Batched serving engine: real JAX prefill + autoregressive decode with a
-KV cache, greedy or temperature sampling. This is the engine that runs at
-edge nodes (reduced SLM) and — in pod deployment — behind the cloud tier.
+"""Continuous-batching serving engine with a slot-based KV-cache pool.
+
+This is the engine that runs at edge nodes (reduced SLM) and — in pod
+deployment — behind the cloud tier. It replaces the old static-batch path
+(pad a batch, block until every sequence finishes, re-trace per batch
+shape) with a fixed-capacity slot pool:
+
+* ``max_batch`` slots, each owning one lane of a persistent KV-cache pool
+  (allocated once at ``[max_batch, max_seq, ...]`` per layer), a position
+  counter, and per-request sampling state (temperature, pending token).
+* Requests are admitted into free slots at step boundaries via per-slot
+  prefill-into-cache: a batch-1 prefill (chunk-padded to a ``q_chunk``
+  multiple) produces a cache already padded to ``max_seq``, which a single
+  fixed-shape scatter writes into the slot's lane.
+* ``step()`` runs ONE fused decode for all slots at the fixed shape
+  ``[max_batch, 1]`` with an active-slot mask on the host side; finished
+  sequences free their slot mid-decode so the scheduler can admit queued
+  work without waiting for the rest of the batch.
+
+All jitted functions therefore run at fixed shapes — decode, sampling and
+slot-insert compile exactly once per engine config; prefill compiles once
+per ``q_chunk`` bucket. ``trace_counts`` exposes the per-function trace
+counters so tests and benchmarks can assert compile stability.
+
+Decode budgets are per-slot: each request may emit up to
+``min(max_new_tokens, max_seq - prompt_len)`` tokens — a short prompt in a
+mixed batch is no longer clamped by the longest prompt (the old
+static-batch bug), nor stretched to the batch-max ``max_new_tokens``.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +40,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.api import Model, build_model
-from repro.models.pdefs import abstract_from_defs, init_from_defs
+from repro.models.pdefs import is_pdef
 
 
 @dataclass
@@ -37,8 +62,31 @@ class Request:
     temperature: float = 0.0     # 0 = greedy
 
 
+@dataclass
+class EngineCompletion:
+    """Per-request result carried out of the slot pool."""
+    req_id: int
+    request: Request
+    text: str
+    token_ids: List[int]
+    prompt_tokens: int
+    new_tokens: int
+    time_in_engine_s: float      # admit -> finish (prefill + resident decode)
+
+
+@dataclass
+class _Slot:
+    req_id: int
+    request: Request
+    budget: int                  # per-slot decode budget (satellite fix)
+    prompt_tokens: int
+    pending: int                 # sampled, not yet emitted/fed token
+    admitted_at: float
+    out_ids: List[int] = field(default_factory=list)
+
+
 class ServingEngine:
-    """One model instance serving padded batches."""
+    """One model instance serving a continuously-batched slot pool."""
 
     def __init__(self, cfg: ModelConfig, *, max_seq: int = 512,
                  max_batch: int = 8, seed: int = 0,
@@ -51,78 +99,244 @@ class ServingEngine:
         self.model = build_model(cfg, max_seq=max_seq)
         self.params = params if params is not None else self.model.init(
             jax.random.PRNGKey(seed))
-        self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(self.model.decode_step)
         self._key = jax.random.PRNGKey(seed + 1)
 
+        # ---- persistent KV-cache pool: one lane per slot ------------------
+        pool_defs = self.model.cache_defs(max_batch)
+        self._batch_ax = jax.tree_util.tree_map(
+            lambda d: d.axes.index("batch"), pool_defs, is_leaf=is_pdef)
+        self._cache = jax.tree_util.tree_map(
+            lambda d: jnp.zeros(d.shape, d.dtype), pool_defs, is_leaf=is_pdef)
+
+        # ---- host-side slot state -----------------------------------------
+        self._slots: List[Optional[_Slot]] = [None] * max_batch
+        self._tokens = np.full(max_batch, self.tok.pad_id, np.int32)
+        self._positions = np.zeros(max_batch, np.int32)
+        self._temps = np.zeros(max_batch, np.float32)
+        self._next_req_id = 0
+        self.prefill_s = 0.0      # cumulative engine-lifetime timers
+        self.decode_s = 0.0
+
+        # ---- fixed-shape jitted functions with trace instrumentation ------
+        # the counters increment only when JAX (re)traces a function, so a
+        # stable engine shows exactly one decode/sample/insert trace no
+        # matter how many streams of differing batch mix it serves.
+        self.trace_counts: Dict[str, int] = {
+            "prefill": 0, "decode": 0, "sample": 0, "insert": 0}
+
+        def _prefill_fn(params, tokens, lengths):
+            self.trace_counts["prefill"] += 1
+            return self.model.prefill(params, tokens, None, lengths)
+
+        def _decode_fn(params, cache, tokens1, positions):
+            self.trace_counts["decode"] += 1
+            return self.model.decode_step(params, cache, tokens1, positions)
+
+        def _sample_fn(logits, temps, key):
+            self.trace_counts["sample"] += 1
+            greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+            t = jnp.maximum(temps, 1e-4)[:, None]
+            sampled = jax.random.categorical(key, logits / t, axis=-1)
+            return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+
+        def _insert_fn(pool, one, slot):
+            self.trace_counts["insert"] += 1
+
+            def put(big, small, ax):
+                big_m = jnp.moveaxis(big, ax, 0)
+                row = jnp.moveaxis(small, ax, 0)[0].astype(big_m.dtype)
+                big_m = jax.lax.dynamic_update_index_in_dim(
+                    big_m, row, slot, 0)
+                return jnp.moveaxis(big_m, 0, ax)
+
+            return jax.tree_util.tree_map(put, pool, one, self._batch_ax)
+
+        # donate the cache pool through decode/insert so XLA updates it in
+        # place instead of copying [layers, max_batch, max_seq, ...] per
+        # token (CPU doesn't implement donation and would warn)
+        donate = jax.default_backend() != "cpu"
+        self._prefill = jax.jit(_prefill_fn)
+        self._decode = jax.jit(_decode_fn,
+                               donate_argnums=(1,) if donate else ())
+        self._sample = jax.jit(_sample_fn)
+        self._insert = jax.jit(_insert_fn,
+                               donate_argnums=(0,) if donate else ())
+
+    # ------------------------------------------------------------------
+    # Slot-pool introspection
+    # ------------------------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return sum(s is None for s in self._slots)
+
+    @property
+    def active_slots(self) -> int:
+        return self.max_batch - self.free_slots
+
+    @property
+    def has_active(self) -> bool:
+        return any(s is not None for s in self._slots)
+
+    @property
+    def decode_traces(self) -> int:
+        return self.trace_counts["decode"]
+
+    # ------------------------------------------------------------------
+    # Continuous-batching API: admit / step
+    # ------------------------------------------------------------------
+    def admit(self, request: Request) -> int:
+        """Prefill one request into a free slot's cache lane. Returns the
+        engine-local request id used in :class:`EngineCompletion`."""
+        slot = next((i for i, s in enumerate(self._slots) if s is None), None)
+        if slot is None:
+            raise RuntimeError("no free slot; check free_slots before admit")
+        enc = self.tok.encode(request.prompt)[: self.max_seq - 1]
+        L = len(enc)
+        budget = max(0, min(request.max_new_tokens, self.max_seq - L))
+        qc = max(self.cfg.q_chunk, 1)
+        pad_len = min(-(-L // qc) * qc, self.max_seq)
+        tokens, lengths = self.tok.pad_batch([enc], pad_len)
+
+        t0 = time.perf_counter()
+        logits, lane = self._prefill(self.params, jnp.asarray(tokens),
+                                     jnp.asarray(lengths))
+        self._cache = self._insert(self._cache, lane, np.int32(slot))
+        self._key, sub = jax.random.split(self._key)
+        first = self._sample(logits,
+                             jnp.asarray([request.temperature], jnp.float32),
+                             sub)
+        pending = int(jax.block_until_ready(first)[0])
+        self.prefill_s += time.perf_counter() - t0
+
+        rid = self._next_req_id
+        self._next_req_id += 1
+        self._slots[slot] = _Slot(rid, request, budget, L, pending,
+                                  admitted_at=time.perf_counter())
+        self._tokens[slot] = pending
+        self._positions[slot] = L
+        self._temps[slot] = request.temperature
+        return rid
+
+    def step(self) -> List[EngineCompletion]:
+        """One pump of the pool: harvest pending tokens (retiring finished
+        sequences, freeing their slots), then run ONE fixed-shape decode
+        for whatever remains active."""
+        done: List[EngineCompletion] = []
+        now = time.perf_counter()
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            finished = (s.pending == self.tok.eos_id
+                        or len(s.out_ids) >= s.budget)
+            if not finished:
+                s.out_ids.append(s.pending)
+                finished = len(s.out_ids) >= s.budget
+            if finished:
+                done.append(EngineCompletion(
+                    s.req_id, s.request, self.tok.decode(s.out_ids),
+                    s.out_ids, s.prompt_tokens, len(s.out_ids),
+                    time_in_engine_s=max(now - s.admitted_at, 0.0)))
+                self._free(i)
+
+        if self.has_active:
+            t0 = time.perf_counter()
+            logits, self._cache = self._decode(
+                self.params, self._cache,
+                jnp.asarray(self._tokens)[:, None],
+                jnp.asarray(self._positions))
+            self._key, sub = jax.random.split(self._key)
+            nxt = np.asarray(jax.block_until_ready(
+                self._sample(logits, jnp.asarray(self._temps), sub)))
+            self.decode_s += time.perf_counter() - t0
+            for i, s in enumerate(self._slots):
+                if s is None:
+                    continue
+                s.pending = int(nxt[i])
+                self._tokens[i] = s.pending
+                self._positions[i] += 1
+        return done
+
+    def _free(self, slot: int) -> None:
+        self._slots[slot] = None
+        self._tokens[slot] = self.tok.pad_id
+        self._positions[slot] = 0     # inactive lanes park at position 0
+        self._temps[slot] = 0.0
+
+    # ------------------------------------------------------------------
+    # Batch conveniences on top of the pool
     # ------------------------------------------------------------------
     def generate(self, requests: Sequence[Request]
                  ) -> Tuple[List[str], GenStats]:
+        """Continuously-batched generation: requests are admitted as slots
+        free up, so any number of requests stream through ``max_batch``
+        lanes. Output order matches input order."""
+        return self._pump_all(requests, continuous=True)
+
+    def generate_static(self, requests: Sequence[Request]
+                        ) -> Tuple[List[str], GenStats]:
+        """Static-batch baseline: admit one batch (<= max_batch), then block
+        until EVERY sequence finishes — no mid-decode admission. Kept for
+        benchmarking and equivalence testing against the continuous path."""
         assert 0 < len(requests) <= self.max_batch
-        B = len(requests)
-        enc = [self.tok.encode(r.prompt)[: self.max_seq - 1] for r in requests]
-        max_new = max(r.max_new_tokens for r in requests)
-        max_new = min(max_new, self.max_seq - max(len(e) for e in enc))
-        # pad the prompt block to a q_chunk multiple (blockwise attention);
-        # per-row lengths keep logits/cache writes at the real positions
-        qc = max(self.cfg.q_chunk, 1)
-        longest = max(len(e) for e in enc)
-        pad_len = min(-(-longest // qc) * qc, self.max_seq)
-        tokens, lengths = self.tok.pad_batch(enc, pad_len)
-        tokens = jnp.asarray(tokens)
-        lengths = jnp.asarray(lengths)
+        return self._pump_all(requests, continuous=False)
 
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, tokens, None, lengths)
-        logits.block_until_ready()
-        t_prefill = time.perf_counter() - t0
-
-        out_ids = [[] for _ in range(B)]
-        done = np.zeros(B, bool)
-        positions = np.asarray(lengths)
-        t0 = time.perf_counter()
-        cur = self._sample(logits, requests)
-        for step in range(max_new):
-            for i in range(B):
-                if not done[i]:
-                    tid = int(cur[i])
-                    if tid == self.tok.eos_id:
-                        done[i] = True
-                    else:
-                        out_ids[i].append(tid)
-            if done.all():
-                break
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(cur)[:, None],
-                                         jnp.asarray(positions, jnp.int32))
-            positions = positions + 1
-            cur = self._sample(logits, requests)
-        t_decode = time.perf_counter() - t0
-
-        texts = [self.tok.decode(ids) for ids in out_ids]
+    def _pump_all(self, requests: Sequence[Request], *, continuous: bool
+                  ) -> Tuple[List[str], GenStats]:
+        assert not self.has_active, "engine already has resident requests"
+        p0, d0 = self.prefill_s, self.decode_s
+        queue = list(requests)
+        rid_to_idx: Dict[int, int] = {}
+        comps: Dict[int, EngineCompletion] = {}
+        if not continuous:                      # one up-front batch, no more
+            for i, r in enumerate(queue):
+                rid_to_idx[self.admit(r)] = i
+            queue = []
+        while queue or self.has_active:
+            while continuous and queue and self.free_slots:
+                req = queue.pop(0)
+                rid_to_idx[self.admit(req)] = len(requests) - len(queue) - 1
+            for ec in self.step():
+                comps[rid_to_idx[ec.req_id]] = ec
+        ordered = [comps[i] for i in range(len(requests))]
         stats = GenStats(
-            prompt_tokens=int(np.asarray(lengths).sum()),
-            new_tokens=sum(len(i) for i in out_ids),
-            prefill_s=t_prefill, decode_s=t_decode,
-        )
-        return texts, stats
+            prompt_tokens=sum(c.prompt_tokens for c in ordered),
+            new_tokens=sum(c.new_tokens for c in ordered),
+            prefill_s=self.prefill_s - p0, decode_s=self.decode_s - d0)
+        return [c.text for c in ordered], stats
 
-    def _sample(self, logits, requests) -> np.ndarray:
-        temps = np.array([r.temperature for r in requests], np.float32)
-        greedy = np.asarray(jnp.argmax(logits, -1))
-        if (temps <= 0).all():
-            return greedy
-        self._key, sub = jax.random.split(self._key)
-        t = jnp.maximum(jnp.asarray(temps), 1e-4)[:, None]
-        sampled = np.asarray(jax.random.categorical(sub, logits / t, axis=-1))
-        return np.where(temps > 0, sampled, greedy)
+    # ------------------------------------------------------------------
+    def warmup(self, prompt_lens: Iterable[int] = (1,)) -> None:
+        """Pre-compile every fixed-shape function (decode, sample, insert)
+        and the prefill bucket for each given prompt length, leaving the
+        pool idle. Lets benchmarks separate compile from serve time."""
+        assert not self.has_active
+        qc = max(self.cfg.q_chunk, 1)
+        buckets = sorted({min(-(-max(n, 1) // qc) * qc, self.max_seq)
+                          for n in prompt_lens})
+        key = jax.random.PRNGKey(0)
+        # rebind the pool at every call: the cache argument is donated, so
+        # the old buffer is dead after each decode/insert (pool is idle —
+        # lanes are rewritten on admission, scribbles don't matter)
+        for pad_len in buckets:
+            toks = jnp.zeros((1, pad_len), jnp.int32)
+            logits, lane = self._prefill(self.params, toks,
+                                         jnp.asarray([pad_len], jnp.int32))
+            self._cache = self._insert(self._cache, lane, np.int32(0))
+            self._sample(logits, jnp.asarray([0.0], jnp.float32), key)
+        _, self._cache = self._decode(self.params, self._cache,
+                                      jnp.asarray(self._tokens)[:, None],
+                                      jnp.asarray(self._positions))
+        self._sample(jnp.zeros((self.max_batch, self.cfg.vocab), jnp.float32),
+                     jnp.asarray(self._temps), key)
 
 
-def make_edge_engine(*, max_seq: int = 512, seed: int = 0) -> ServingEngine:
+def make_edge_engine(*, max_seq: int = 512, max_batch: int = 8,
+                     seed: int = 0) -> ServingEngine:
     """Default edge SLM: reduced qwen2-0.5b (byte vocab capable)."""
     from repro.configs import get_config
     cfg = get_config("qwen2-0.5b", reduced=True)
-    return ServingEngine(cfg, max_seq=max_seq, seed=seed)
+    return ServingEngine(cfg, max_seq=max_seq, max_batch=max_batch, seed=seed)
 
 
-__all__ = ["ServingEngine", "Request", "GenStats", "make_edge_engine"]
+__all__ = ["ServingEngine", "Request", "GenStats", "EngineCompletion",
+           "make_edge_engine"]

@@ -1,7 +1,12 @@
-"""Request scheduler: arrival queue -> max-batch dispatch with per-tier
-queues (edge engines + cloud engine), FIFO within a tier, oldest-deadline
-first across tiers. This is the host-side batching layer the engines serve
-under; the gate decides the tier, the scheduler packs the batches.
+"""Request scheduler: arrival queues -> continuous slot-pool admission.
+
+Per-tier deadline heaps (edge engines + cloud engine) feed the engines'
+slot pools. Instead of the old "pop one rigid batch, block on it" loop,
+``pump()`` runs one scheduling round: for every tier it admits queued
+requests (oldest deadline first) into whatever slots just freed, then
+advances that tier's engine by one fused decode step, harvesting
+per-request completions mid-stream. The gate decides the tier; the
+scheduler keeps the lanes full.
 """
 from __future__ import annotations
 
@@ -9,9 +14,9 @@ import heapq
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
-from repro.serving.engine import GenStats, Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine
 
 
 @dataclass(order=True)
@@ -21,6 +26,7 @@ class _Item:
     request: Request = field(compare=False)
     tier: str = field(compare=False, default="edge")
     enqueued_at: float = field(compare=False, default=0.0)
+    queue_wait_s: float = field(compare=False, default=0.0)
 
 
 @dataclass
@@ -28,18 +34,19 @@ class Completion:
     request: Request
     text: str
     tier: str
-    queue_wait_s: float
-    batch_size: int
+    queue_wait_s: float          # submit -> slot admission
+    time_in_engine_s: float      # admission -> finish
+    prompt_tokens: int = 0
+    new_tokens: int = 0
 
 
 class TierScheduler:
-    """Batched FIFO scheduler over named engine tiers."""
+    """Deadline-ordered continuous scheduler over named engine tiers."""
 
-    def __init__(self, engines: Dict[str, ServingEngine],
-                 max_wait_s: float = 0.05):
+    def __init__(self, engines: Dict[str, ServingEngine]):
         self.engines = engines
-        self.max_wait_s = max_wait_s
         self._queues: Dict[str, List[_Item]] = {t: [] for t in engines}
+        self._inflight: Dict[tuple, _Item] = {}
         self._seq = itertools.count()
 
     def submit(self, request: Request, tier: str,
@@ -51,32 +58,49 @@ class TierScheduler:
                        _Item(deadline_s, next(self._seq), request, tier, now))
 
     def pending(self, tier: Optional[str] = None) -> int:
+        """Queued requests not yet admitted into a slot."""
         if tier:
             return len(self._queues[tier])
         return sum(len(q) for q in self._queues.values())
 
-    def step(self) -> List[Completion]:
-        """Serve one batch from the most-urgent non-empty tier."""
-        tiers = [t for t, q in self._queues.items() if q]
-        if not tiers:
-            return []
-        tier = min(tiers, key=lambda t: self._queues[t][0].deadline)
-        eng = self.engines[tier]
-        q = self._queues[tier]
-        items = [heapq.heappop(q) for _ in range(min(eng.max_batch, len(q)))]
-        now = time.perf_counter()
-        texts, stats = eng.generate([it.request for it in items])
-        return [
-            Completion(it.request, text, tier,
-                       queue_wait_s=max(now - it.enqueued_at, 0.0),
-                       batch_size=len(items))
-            for it, text in zip(items, texts)
-        ]
+    def in_flight(self, tier: Optional[str] = None) -> int:
+        """Requests resident in an engine slot, still decoding."""
+        if tier:
+            return sum(t == tier for t, _ in self._inflight)
+        return len(self._inflight)
+
+    def pump(self) -> List[Completion]:
+        """One scheduling round across every tier: fill free slots from the
+        deadline heap, advance each engine one decode step, and return the
+        requests that finished this round."""
+        out: List[Completion] = []
+        for tier, eng in self.engines.items():
+            q = self._queues[tier]
+            while q and eng.free_slots > 0:
+                item = heapq.heappop(q)
+                item.queue_wait_s = time.perf_counter() - item.enqueued_at
+                rid = eng.admit(item.request)
+                self._inflight[(tier, rid)] = item
+            if not eng.has_active:
+                continue
+            for ec in eng.step():
+                item = self._inflight.pop((tier, ec.req_id))
+                out.append(Completion(
+                    request=item.request, text=ec.text, tier=tier,
+                    queue_wait_s=max(item.queue_wait_s, 0.0),
+                    time_in_engine_s=ec.time_in_engine_s,
+                    prompt_tokens=ec.prompt_tokens,
+                    new_tokens=ec.new_tokens))
+        return out
+
+    # one pump used to serve a whole batch; keep the name as an alias for
+    # callers that just want "advance the scheduler"
+    step = pump
 
     def drain(self) -> List[Completion]:
         out: List[Completion] = []
-        while self.pending():
-            out.extend(self.step())
+        while self.pending() or self.in_flight():
+            out.extend(self.pump())
         return out
 
 

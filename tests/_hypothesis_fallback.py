@@ -1,0 +1,49 @@
+"""Stand-ins for ``hypothesis`` so tier-1 collection works without it.
+
+Property-test modules import via::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+When hypothesis is installed (see requirements-dev.txt) the real library is
+used and the property tests run; when it is missing, each ``@given`` test
+becomes a cleanly-skipped stub and every other test in the module still
+runs — a missing dev dependency must never break tier-1 collection.
+"""
+from __future__ import annotations
+
+import pytest
+
+
+class _DummyStrategy:
+    """Absorbs any strategy construction/chaining at decoration time."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+st = _DummyStrategy()
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        # plain zero-arg stub: pytest must not see hypothesis-injected
+        # parameters as fixture requests
+        def stub():
+            pytest.skip("hypothesis not installed (pip install -r "
+                        "requirements-dev.txt)")
+        stub.__name__ = fn.__name__
+        stub.__doc__ = fn.__doc__
+        return stub
+    return deco
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+    return deco

@@ -1,7 +1,10 @@
 """Retrieval substrate: embedder, store FIFO, overlap, GraphRAG, updates."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # tier-1 must collect without hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.edge_assist import query_keywords, select_edge
 from repro.core.knowledge import AdaptiveKnowledgeUpdater, KnowledgeUpdateConfig

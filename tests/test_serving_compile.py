@@ -1,0 +1,76 @@
+"""Engine compile stability: the continuous-batching engine must run all
+fixed-shape jitted functions (decode step, sampling, slot insert) from a
+single trace no matter how the serving mix changes. The engine's
+``trace_counts`` increment inside each traced body, so a retrace is
+directly observable."""
+import pytest
+
+from repro.serving.engine import Request, make_edge_engine
+from repro.serving.scheduler import TierScheduler
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return make_edge_engine(max_seq=128, max_batch=4, seed=0)
+
+
+def test_decode_traces_once_across_stream_shapes(engine):
+    """Two streams with different batch sizes and prompt lengths — plus the
+    static path — must never re-trace the decode step."""
+    stream_a = [Request("short", max_new_tokens=3),
+                Request("b" * 40, max_new_tokens=5)]
+    engine.generate(stream_a)
+    assert engine.trace_counts["decode"] == 1
+
+    stream_b = [Request("c" * (4 + 9 * i), max_new_tokens=2 + i % 3)
+                for i in range(7)]                     # 7 reqs > max_batch
+    engine.generate(stream_b)
+    assert engine.trace_counts["decode"] == 1
+
+    engine.generate_static(stream_a)
+    assert engine.trace_counts["decode"] == 1
+
+
+def test_sample_and_insert_trace_counts_stable(engine):
+    """Sampling compiles once per logits batch shape (1 for admission,
+    max_batch for decode); the slot insert compiles exactly once."""
+    before = dict(engine.trace_counts)
+    engine.generate([Request("hello world", max_new_tokens=4),
+                     Request("x" * 70, max_new_tokens=3)])
+    assert engine.trace_counts["insert"] == before["insert"] == 1
+    assert engine.trace_counts["sample"] == before["sample"] == 2
+
+
+def test_prefill_compiles_per_chunk_bucket_only(engine):
+    """Prefill pads prompts to q_chunk multiples: a prompt landing in an
+    already-seen bucket must not add a trace."""
+    qc = max(engine.cfg.q_chunk, 1)
+    before = engine.trace_counts["prefill"]
+    engine.generate([Request("a" * (qc + 5), max_new_tokens=2)])   # 2-chunk
+    mid = engine.trace_counts["prefill"]
+    engine.generate([Request("b" * (qc + 9), max_new_tokens=2)])   # same
+    assert engine.trace_counts["prefill"] == mid
+    assert mid - before <= 1
+
+
+def test_scheduler_pump_does_not_retrace(engine):
+    """Continuous admission through the scheduler — slots freeing and
+    refilling at varying occupancy — keeps the single decode trace."""
+    sched = TierScheduler({"edge": engine})
+    for i in range(9):
+        sched.submit(Request(f"req {i} " + "y" * (3 * i),
+                             max_new_tokens=1 + i % 4), "edge")
+    done = sched.drain()
+    assert len(done) == 9
+    assert engine.trace_counts["decode"] == 1
+
+
+def test_warmup_precompiles_everything(engine):
+    """After warmup, serving previously-unseen prompt lengths in existing
+    buckets triggers zero traces of any kind."""
+    engine.warmup([1, engine.cfg.q_chunk + 1])
+    before = dict(engine.trace_counts)
+    engine.generate([Request("z" * 30, max_new_tokens=2),
+                     Request("w" * (engine.cfg.q_chunk + 20),
+                             max_new_tokens=2)])
+    assert engine.trace_counts == before
