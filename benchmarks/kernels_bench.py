@@ -11,10 +11,15 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, paged_decode_attention_pallas,
+)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref, paged_decode_attention_ref,
+)
 from repro.kernels.retrieval_topk.kernel import retrieval_topk_pallas
 from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
 from repro.kernels.rbf.kernel import rbf_matrix_pallas
@@ -49,6 +54,30 @@ def run(quick: bool = False):
     rows.append({
         "name": "decode_attention/jnp-ref",
         "us_per_call": round(_time(decode_attention_ref, q, k, v, lens), 1),
+        "derived_flops": flops,
+    })
+
+    # paged variant at the same (B, H, KV, hd, S) geometry: S split into
+    # page_size chunks scattered across a 2x-overprovisioned arena
+    ps = 16
+    n_pages = S // ps
+    P = 2 * B * n_pages + 1
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(np.arange(1, P))[: B * n_pages]
+    pt = jnp.asarray(perm.reshape(B, n_pages).astype(np.int32))
+    k_arena = jax.random.normal(key, (P, ps, KV, hd), jnp.float32)
+    v_arena = jax.random.normal(key, (P, ps, KV, hd), jnp.float32)
+    flops = 4 * B * H * hd * S
+    rows.append({
+        "name": "paged_decode_attention/pallas-interpret",
+        "us_per_call": round(_time(paged_decode_attention_pallas,
+                                   q, k_arena, v_arena, pt, lens), 1),
+        "derived_flops": flops,
+    })
+    rows.append({
+        "name": "paged_decode_attention/jnp-ref",
+        "us_per_call": round(_time(paged_decode_attention_ref,
+                                   q, k_arena, v_arena, pt, lens), 1),
         "derived_flops": flops,
     })
 

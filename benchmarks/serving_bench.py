@@ -1,18 +1,19 @@
-"""Serving benchmark: static vs continuous batching on a mixed-length stream.
+"""Serving benchmarks on a heavy-tailed mixed-length stream.
 
-A single engine (reduced qwen2-0.5b, byte tokenizer) serves the SAME
-request set — prompt lengths 8..200, max_new_tokens 4..64 — two ways:
+Two comparisons over the SAME request mix (reduced qwen2-0.5b, byte
+tokenizer, prompt lengths 8..200, max_new_tokens 4..64, log-uniform):
 
-* static   — requests are chunked into rigid batches of ``max_batch``; each
-             batch blocks until its longest sequence finishes (head-of-line
-             blocking), exactly the seed engine's behaviour.
-* continuous — a TierScheduler streams requests through the engine's slot
-             pool, admitting a queued request the moment a slot frees.
+1. static vs continuous batching (PR 1): rigid ``max_batch`` batches with
+   head-of-line blocking vs a TierScheduler streaming the slot pool.
+2. paged vs contiguous KV layout (this PR): a contiguous engine reserves a
+   worst-case ``[max_batch, max_seq]`` lane per slot; the paged engine gets
+   the SAME KV token capacity as a page arena but 4x the slots, so resident
+   requests are bounded by actual token demand instead of worst-case lanes.
+   Reports tokens/s (target: within 5%), peak resident requests (target:
+   >=2x at equal cache memory), KV bytes, and decode re-traces (must be 0).
 
-Both paths share the engine's fixed-shape jitted functions (warmed up
-before timing), so the measured delta is pure scheduling: slot reuse vs
-batch barriers. Reports tokens/s and p50/p95 request latency, plus the
-decode-step trace count, which must stay at 1 across the whole run.
+Both paths share warmed-up fixed-shape jitted functions, so the measured
+deltas are pure scheduling / memory layout.
 
 Usage:  PYTHONPATH=src:. python benchmarks/serving_bench.py [--smoke] [--check]
 """
@@ -27,13 +28,16 @@ import numpy as np
 from benchmarks.common import emit
 from repro.serving import Request, TierScheduler, make_edge_engine
 
+PAGE_SIZE = 16
+PAGED_SLOT_MULT = 4          # paged engine: 4x slots at equal KV memory
+
 
 def mixed_workload(n: int, seed: int, min_prompt=8, max_prompt=200,
                    min_new=4, max_new=64):
     """Serving-shaped mix: lengths are log-uniform over the given ranges
     (heavy-tailed, like real chat traffic — many short requests, a long
     tail), which is what makes static batching pay for head-of-line
-    blocking."""
+    blocking and contiguous lanes pay for worst-case reservation."""
     rng = np.random.default_rng(seed)
 
     def log_uniform(lo, hi):
@@ -76,6 +80,20 @@ def run_continuous(eng, reqs):
     return tokens, time.perf_counter() - t0, lat
 
 
+def _row(name, tokens, wall, lat, **extra):
+    r = {
+        "name": name,
+        "requests": len(lat),
+        "new_tokens": tokens,
+        "tokens_per_s": round(tokens / wall, 1),
+        "wall_s": round(wall, 2),
+        "p50_latency_s": round(float(np.percentile(lat, 50)), 2),
+        "p95_latency_s": round(float(np.percentile(lat, 95)), 2),
+    }
+    r.update(extra)
+    return r
+
+
 def run(quick: bool = False, n_requests: int = 64, max_batch: int = 8,
         max_seq: int = 384, seed: int = 0, check: bool = False):
     if quick:
@@ -92,28 +110,20 @@ def run(quick: bool = False, n_requests: int = 64, max_batch: int = 8,
     tok_c, wall_c, lat_c = run_continuous(eng, reqs)
     retraces = eng.trace_counts["decode"] - traces0["decode"]
 
-    def row(name, tokens, wall, lat):
-        return {
-            "name": name,
-            "requests": len(lat),
-            "new_tokens": tokens,
-            "tokens_per_s": round(tokens / wall, 1),
-            "wall_s": round(wall, 2),
-            "p50_latency_s": round(float(np.percentile(lat, 50)), 2),
-            "p95_latency_s": round(float(np.percentile(lat, 95)), 2),
-        }
-
     speedup = (tok_c / wall_c) / (tok_s / wall_s)
     rows = [
-        row("static", tok_s, wall_s, lat_s),
-        row("continuous", tok_c, wall_c, lat_c),
+        _row("static", tok_s, wall_s, lat_s),
+        _row("continuous", tok_c, wall_c, lat_c),
         {"name": "summary", "throughput_speedup": round(speedup, 2),
          "decode_retraces_after_warmup": retraces,
          "decode_traces_total": eng.decode_traces},
     ]
+    rows += run_paged_vs_contiguous(n_requests=n_requests,
+                                    base_batch=max_batch, max_seq=max_seq,
+                                    seed=seed, quick=quick)
     emit(rows, "serving_bench")
     if check:
-        # tiny smoke runs are noisy: only the full-size bench gates on 1.5x
+        # tiny smoke runs are noisy: only the full-size bench gates on perf
         need = 1.0 if quick else 1.5
         ok = speedup >= need and retraces == 0 and tok_s == tok_c
         if not ok:
@@ -123,7 +133,70 @@ def run(quick: bool = False, n_requests: int = 64, max_batch: int = 8,
             sys.exit(1)
         print(f"CHECK OK: speedup={speedup:.2f} (>={need}), zero decode "
               f"retraces, token counts match")
+        _check_paged(rows, quick)
     return rows
+
+
+def run_paged_vs_contiguous(*, n_requests: int, base_batch: int,
+                            max_seq: int, seed: int, quick: bool):
+    """Same stream, equal KV token capacity: contiguous ``base_batch`` lanes
+    vs a page arena of ``base_batch * max_seq / PAGE_SIZE`` pages behind
+    ``PAGED_SLOT_MULT * base_batch`` slots."""
+    kw = dict(max_prompt=min(200, max_seq - 70)) if max_seq < 280 else {}
+    reqs = mixed_workload(n_requests, seed, **kw)
+
+    def build(layout, mb, **ekw):
+        e = make_edge_engine(max_seq=max_seq, max_batch=mb, seed=0,
+                             kv_layout=layout, **ekw)
+        e.warmup(len(e.tok.encode(r.prompt)) for r in reqs)
+        return e
+
+    cont = build("contiguous", base_batch)
+    paged = build("paged", PAGED_SLOT_MULT * base_batch, page_size=PAGE_SIZE,
+                  num_pages=base_batch * (max_seq // PAGE_SIZE))
+    assert paged.kv_cache_tokens == cont.kv_cache_tokens
+
+    rows = []
+    for name, e in (("kv-contiguous", cont), ("kv-paged", paged)):
+        t0 = dict(e.trace_counts)
+        tokens, wall, lat = run_continuous(e, reqs)
+        rows.append(_row(
+            name, tokens, wall, lat,
+            max_batch=e.max_batch,
+            peak_resident=e.peak_active,
+            kv_capacity_tokens=e.kv_cache_tokens,
+            kv_cache_mib=round(e.kv_cache_bytes / 2**20, 2),
+            decode_retraces=e.trace_counts["decode"] - t0["decode"]))
+    c, p = rows
+    rows.append({
+        "name": "paged-summary",
+        "tokens_per_s_ratio": round(p["tokens_per_s"] / c["tokens_per_s"], 3),
+        "resident_ratio": round(p["peak_resident"] / c["peak_resident"], 2),
+        "equal_kv_capacity": p["kv_capacity_tokens"] == c["kv_capacity_tokens"],
+    })
+    return rows
+
+
+def _check_paged(rows, quick: bool):
+    s = next(r for r in rows if r["name"] == "paged-summary")
+    paged = next(r for r in rows if r["name"] == "kv-paged")
+    cont = next(r for r in rows if r["name"] == "kv-contiguous")
+    retraces = paged["decode_retraces"] + cont["decode_retraces"]
+    tok_match = paged["new_tokens"] == cont["new_tokens"]
+    # tiny smoke runs are timing-noisy; gate throughput at full size only
+    need_tps = 0.0 if quick else 0.95
+    ok = (s["equal_kv_capacity"] and retraces == 0 and tok_match
+          and s["resident_ratio"] >= 2.0
+          and s["tokens_per_s_ratio"] >= need_tps)
+    if not ok:
+        print(f"PAGED CHECK FAILED: tokens_per_s_ratio="
+              f"{s['tokens_per_s_ratio']} (need >={need_tps}), "
+              f"resident_ratio={s['resident_ratio']} (need >=2.0), "
+              f"retraces={retraces}, tokens_match={tok_match}")
+        sys.exit(1)
+    print(f"PAGED CHECK OK: tokens/s ratio {s['tokens_per_s_ratio']} "
+          f"(>={need_tps}), {s['resident_ratio']}x residents at equal KV "
+          f"memory, zero decode retraces, token counts match")
 
 
 if __name__ == "__main__":
@@ -135,8 +208,9 @@ if __name__ == "__main__":
     ap.add_argument("--max-seq", type=int, default=384)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
-                    help="exit nonzero unless speedup >= 1.5x with zero "
-                         "decode retraces")
+                    help="exit nonzero unless continuous >=1.5x static AND "
+                         "paged holds >=2x residents at tokens/s within 5% "
+                         "of contiguous, all with zero decode retraces")
     args = ap.parse_args()
     run(quick=args.smoke, n_requests=args.requests, max_batch=args.max_batch,
         max_seq=args.max_seq, seed=args.seed, check=args.check)

@@ -1,15 +1,27 @@
-"""Pallas TPU kernel: fused GQA flash-decode attention.
+"""Pallas TPU kernels: fused GQA flash-decode attention, contiguous + paged.
 
-One new query token per sequence attends to a [S, KV, hd] KV cache with an
+One new query token per sequence attends to its KV cache with an
 online-softmax accumulation over sequence blocks — the serving hot loop.
 
-TPU adaptation (vs a CUDA warp-per-row decode kernel): the grid iterates
-(batch, kv_head, seq_block); each program instance processes a whole
-[BS, hd] cache tile from VMEM against the [G, hd] query group on the MXU,
-with running max / sum-exp / weighted-value accumulators in VMEM scratch.
-hd is kept at a 128-lane multiple and BS at a multiple of 8 for the VPU/MXU
-layout. Masking uses the per-row valid length (ring-buffer caches pass
-length=min(len, S) with order-independent softmax).
+Two cache layouts share one kernel body:
+
+* contiguous — ``k_cache/v_cache [B, S, KV, hd]``: the grid iterates
+  (batch, kv_head, seq_block) and each program consumes one ``[block_s, hd]``
+  cache tile.
+* paged — ``k_arena/v_arena [num_pages, page_size, KV, hd]`` plus a per-row
+  ``page_table [B, n_pages]`` of physical page ids: the grid's seq-block axis
+  indexes *through the page table* (one program per logical page) using
+  Pallas scalar prefetch, so the same online-softmax accumulators run over a
+  scattered arena without ever materializing a contiguous copy.
+
+TPU adaptation (vs a CUDA warp-per-row decode kernel): each program instance
+processes a whole ``[BS, hd]`` cache tile from VMEM against the ``[G, hd]``
+query group on the MXU, with running max / sum-exp / weighted-value
+accumulators in VMEM scratch. hd is kept at a 128-lane multiple and BS at a
+multiple of 8 for the VPU/MXU layout. Masking uses the per-row valid length;
+probabilities AND values are zeroed outside it, so out-of-bounds tile padding
+(NaN in interpret mode, garbage on TPU) and ``length == 0`` rows (defined to
+return zeros) never reach the accumulators.
 """
 from __future__ import annotations
 
@@ -23,9 +35,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
-                        m_ref, l_ref, acc_ref, *, block_s: int, scale: float):
-    """Grid: (B, KV, S//block_s) — S is the innermost (sequential) axis.
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _flash_decode_body(len_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, block_s: int, scale: float):
+    """Shared online-softmax block step; grid axis 2 walks sequence tiles.
 
     q_ref:   [G, hd]      (this batch row, this kv head's query group)
     k_ref:   [block_s, hd]
@@ -33,6 +49,11 @@ def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
     len_ref: [1]          (valid cache length for this row)
     o_ref:   [G, hd]
     scratch: m_ref [G, 1], l_ref [G, 1], acc_ref [G, hd]  (f32)
+
+    Tile rows hold *logical* positions ``s_idx * block_s + i`` regardless of
+    layout: contiguous callers map grid index -> cache offset directly,
+    paged callers map it through the page table in their BlockSpecs, so the
+    masking below is layout-agnostic.
     """
     s_idx = pl.program_id(2)
     n_s = pl.num_programs(2)
@@ -47,17 +68,27 @@ def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
     k = k_ref[...].astype(jnp.float32)                    # [BS, hd]
     v = v_ref[...].astype(jnp.float32)
 
+    tile_start = s_idx * block_s
+    length = len_ref[0]
+    # zero cache-value rows beyond the valid length BEFORE they can meet the
+    # accumulators: tile padding past the array end is undefined (NaN in
+    # interpret mode) and 0 * NaN would poison the p @ v product
+    pos_col = tile_start + jax.lax.broadcasted_iota(jnp.int32, (block_s, 1), 0)
+    v = jnp.where(pos_col < length, v, 0.0)
+
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    # mask positions beyond the valid length
-    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = pos < len_ref[0]
+    pos = tile_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < length
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]                                   # [G, 1]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)                                # [G, BS]
+    # masked probabilities are forced to exact 0 — a fully-masked tile would
+    # otherwise contribute exp(NEG_INF - NEG_INF) = 1 per position (NEG_INF
+    # is a finite sentinel) and a length-0 row would average garbage
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)         # [G, BS]
     l_new = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
@@ -70,23 +101,37 @@ def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                       ).astype(o_ref.dtype)
 
 
+def _paged_decode_attn_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                              m_ref, l_ref, acc_ref, *, page_size: int,
+                              scale: float):
+    """Paged layout. Grid: (B, KV, n_pages); ``pt_ref`` is the scalar-
+    prefetched page table — the k/v BlockSpecs already used it to DMA the
+    physical page for this (row, logical page) program, so the body only
+    needs the logical position ``page_idx * page_size`` for masking."""
+    _flash_decode_body(len_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, block_s=page_size, scale=scale)
+
+
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def decode_attention_pallas(q, k_cache, v_cache, lengths, *,
                             block_s: int = 256, interpret: bool = True):
-    """q [B,H,hd]; k_cache/v_cache [B,S,KV,hd]; lengths [B] -> [B,H,hd]."""
+    """q [B,H,hd]; k_cache/v_cache [B,S,KV,hd]; lengths [B] -> [B,H,hd].
+
+    ``block_s`` is clamped to cover S at the 8-multiple VPU/MXU layout
+    constraint; a cache shorter than the block therefore runs a single
+    (padded, masked) program instead of a zero-size grid.
+    """
     B, H, hd = q.shape
     S, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
-    block_s = min(block_s, S)
-    while S % block_s:
-        block_s -= 1
+    block_s = max(8, min(_round_up(block_s, 8), _round_up(S, 8)))
     scale = 1.0 / (hd ** 0.5)
 
     qg = q.reshape(B, KV, G, hd)
     lengths = lengths.astype(jnp.int32)
 
-    grid = (B, KV, S // block_s)
-    kernel = functools.partial(_decode_attn_kernel, block_s=block_s,
+    grid = (B, KV, -(-S // block_s))     # ceil: ragged tail tile is masked
+    kernel = functools.partial(_flash_decode_body, block_s=block_s,
                                scale=scale)
     out = pl.pallas_call(
         kernel,
@@ -109,4 +154,57 @@ def decode_attention_pallas(q, k_cache, v_cache, lengths, *,
         ],
         interpret=interpret,
     )(lengths, qg, k_cache, v_cache)
+    return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q, k_arena, v_arena, page_table, lengths, *,
+                                  interpret: bool = True):
+    """Paged flash-decode: q [B,H,hd]; arenas [P, page_size, KV, hd];
+    page_table [B, n_pages] int32 physical page ids; lengths [B] -> [B,H,hd].
+
+    One program per (row, kv_head, logical page). The page table rides in as
+    a scalar-prefetch operand so the k/v BlockSpec index maps can chase it:
+    program (b, h, i) DMAs physical page ``page_table[b, i]``. Entries past a
+    row's valid length may point anywhere (allocators pad with a trash page)
+    — they are masked by ``lengths`` exactly like the contiguous tail.
+    """
+    B, H, hd = q.shape
+    P, page_size, KV, _ = k_arena.shape
+    n_pages = page_table.shape[1]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(B, KV, G, hd)
+    lengths = lengths.astype(jnp.int32)
+    page_table = page_table.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_decode_attn_kernel,
+                               page_size=page_size, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                       # the page table
+        grid=(B, KV, n_pages),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i, pt: (b,)),                  # len
+            pl.BlockSpec((None, None, G, hd),
+                         lambda b, h, i, pt: (b, h, 0, 0)),
+            pl.BlockSpec((None, page_size, None, hd),
+                         lambda b, h, i, pt: (pt[b, i], 0, h, 0)),
+            pl.BlockSpec((None, page_size, None, hd),
+                         lambda b, h, i, pt: (pt[b, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, hd),
+                               lambda b, h, i, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, qg, k_arena, v_arena)
     return out.reshape(B, H, hd)

@@ -1,10 +1,20 @@
-"""jit'd public wrapper: Pallas on TPU, interpret-mode elsewhere."""
+"""jit'd public wrappers for flash-decode attention (contiguous + paged).
+
+Dispatch policy: the Pallas kernels run compiled on TPU; every other backend
+gets the pure-jnp reference, which XLA fuses well — interpret-mode Pallas is
+a Python-level emulator meant for kernel correctness work, not serving (see
+the retrieval_topk note for measurements of that gap).
+"""
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, paged_decode_attention_pallas,
+)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref, paged_decode_attention_ref,
+)
 
 
 def _on_tpu() -> bool:
@@ -12,10 +22,27 @@ def _on_tpu() -> bool:
 
 
 def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 256):
-    """Fused GQA flash-decode. q [B,H,hd]; caches [B,S,KV,hd]; lengths [B]."""
-    return decode_attention_pallas(q, k_cache, v_cache, lengths,
-                                   block_s=block_s,
-                                   interpret=not _on_tpu())
+    """Fused GQA flash-decode. q [B,H,hd]; caches [B,S,KV,hd]; lengths [B].
+
+    ``block_s`` is a tiling hint; the kernel clamps it to cover S at the
+    8-multiple layout constraint, so S < block_s no longer collapses to a
+    zero-size sequence grid.
+    """
+    if _on_tpu():
+        return decode_attention_pallas(q, k_cache, v_cache, lengths,
+                                       block_s=block_s, interpret=False)
+    return decode_attention_ref(q, k_cache, v_cache, lengths)
 
 
-__all__ = ["decode_attention", "decode_attention_ref"]
+def paged_decode_attention(q, k_arena, v_arena, page_table, lengths):
+    """Paged GQA flash-decode. q [B,H,hd]; arenas [P, page_size, KV, hd];
+    page_table [B, n_pages] physical page ids; lengths [B]."""
+    if _on_tpu():
+        return paged_decode_attention_pallas(q, k_arena, v_arena, page_table,
+                                             lengths, interpret=False)
+    return paged_decode_attention_ref(q, k_arena, v_arena, page_table,
+                                      lengths)
+
+
+__all__ = ["decode_attention", "decode_attention_ref",
+           "paged_decode_attention", "paged_decode_attention_ref"]

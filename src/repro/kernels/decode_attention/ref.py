@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the flash-decode kernel."""
+"""Pure-jnp oracles for the flash-decode kernels (contiguous + paged)."""
 from __future__ import annotations
 
 import jax
@@ -7,7 +7,11 @@ import numpy as np
 
 
 def decode_attention_ref(q, k_cache, v_cache, lengths):
-    """q [B,H,hd]; k_cache/v_cache [B,S,KV,hd]; lengths [B] -> [B,H,hd]."""
+    """q [B,H,hd]; k_cache/v_cache [B,S,KV,hd]; lengths [B] -> [B,H,hd].
+
+    Rows with ``length == 0`` return zeros (no valid keys to attend to) —
+    the same contract the kernel implements.
+    """
     B, H, hd = q.shape
     S, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
@@ -18,5 +22,23 @@ def decode_attention_ref(q, k_cache, v_cache, lengths):
     valid = jnp.arange(S)[None, :] < lengths[:, None]
     s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v)
     return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_arena, v_arena, page_table, lengths):
+    """Gather-based paged oracle.
+
+    q [B,H,hd]; arenas [P, page_size, KV, hd]; page_table [B, n_pages] of
+    physical page ids; lengths [B] -> [B,H,hd]. Logical position
+    ``t`` of row ``b`` lives at ``arena[page_table[b, t // page_size],
+    t % page_size]``; the gather materializes each row's logical
+    [n_pages * page_size, KV, hd] view and defers to the contiguous oracle.
+    """
+    B = q.shape[0]
+    _, page_size, KV, hd = k_arena.shape
+    n_pages = page_table.shape[1]
+    k = k_arena[page_table].reshape(B, n_pages * page_size, KV, hd)
+    v = v_arena[page_table].reshape(B, n_pages * page_size, KV, hd)
+    return decode_attention_ref(q, k, v, lengths)

@@ -6,6 +6,13 @@ TPU formulation streams [BN, D] embedding tiles through the MXU against the
 query vector and merges each tile's scores into a VMEM top-k scratch with k
 iterative masked-max passes (k is small; sort-free and VPU-friendly).
 Rows beyond ``n_valid`` (capacity padding) are masked to -inf.
+
+Off-TPU note: this kernel is TPU-only in practice. Interpret mode emulates
+each grid step in Python, so the blockwise merge that saves HBM traffic on
+TPU becomes pure host overhead — measured ~4x slower than the jnp reference
+(kernels_bench: 1679us vs 422us, N=4096 D=384). ``ops.retrieval_topk``
+therefore falls back to the reference on non-TPU backends; interpret mode
+remains available here for correctness tests of the kernel body itself.
 """
 from __future__ import annotations
 

@@ -1,4 +1,14 @@
-"""jit'd public wrapper for fused retrieval top-k."""
+"""jit'd public wrapper for fused retrieval top-k.
+
+Dispatch policy: the Pallas kernel only runs where it compiles — on TPU.
+Off-TPU it previously ran in interpret mode, which benchmarked ~4x SLOWER
+than the plain-jnp reference (results/benchmarks/kernels_bench.json:
+1679us vs 422us at N=4096, D=384): interpret mode executes the kernel body
+block-by-block in Python, so the blockwise top-k merge — whose whole point
+is avoiding HBM round-trips on TPU — degenerates into per-block host
+dispatch overhead. A real fallback therefore routes to the reference, which
+XLA compiles to a single fused matvec + top_k.
+"""
 from __future__ import annotations
 
 import jax
@@ -8,8 +18,10 @@ from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
 
 
 def retrieval_topk(emb, q, k: int = 5, *, n_valid=None, block_n: int = 512):
-    return retrieval_topk_pallas(emb, q, k, block_n=block_n, n_valid=n_valid,
-                                 interpret=jax.default_backend() != "tpu")
+    if jax.default_backend() == "tpu":
+        return retrieval_topk_pallas(emb, q, k, block_n=block_n,
+                                     n_valid=n_valid, interpret=False)
+    return retrieval_topk_ref(emb, q, k, n_valid=n_valid)
 
 
 __all__ = ["retrieval_topk", "retrieval_topk_ref"]

@@ -6,8 +6,11 @@ latter).
       --prompts "hello world" "what is rag"
 
 The engine streams any number of prompts through a fixed pool of
-``--max-batch`` KV-cache slots; pass ``--static`` to run the blocking
-static-batch baseline instead (one padded batch at a time).
+``--max-batch`` slots backed by a block-granular paged KV-cache (page
+arena + per-slot page tables) wherever the arch supports it. Pass
+``--kv-layout contiguous`` for the worst-case per-slot lanes,
+``--page-size`` / ``--num-pages`` to shape the page pool, and ``--static``
+to run the blocking static-batch baseline (one padded batch at a time).
 """
 from __future__ import annotations
 
@@ -26,6 +29,14 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--static", action="store_true",
                     help="static-batch baseline instead of continuous")
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=["auto", "paged", "contiguous"],
+                    help="KV-cache layout (auto: paged where supported)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size (default: worst case, "
+                         "max_batch * max_seq / page_size)")
     ap.add_argument("--prompts", nargs="+",
                     default=["What is the capital of France?"])
     args = ap.parse_args()
@@ -33,9 +44,13 @@ def main():
     cfg = get_config(args.arch, reduced=True)
     if cfg.vocab < 300:
         raise SystemExit("arch vocab too small for byte tokenizer")
-    eng = ServingEngine(cfg, max_seq=args.max_seq, max_batch=args.max_batch)
+    eng = ServingEngine(cfg, max_seq=args.max_seq, max_batch=args.max_batch,
+                        kv_layout=args.kv_layout, page_size=args.page_size,
+                        num_pages=args.num_pages)
+    kv = (f"paged KV: {eng.num_pages} x {eng.page_size}-token pages"
+          if eng.kv_layout == "paged" else "contiguous KV lanes")
     print(f"serving {cfg.arch_id} (reduced, {eng.model.n_params():,} params, "
-          f"random weights — output is noise; the engine is real)")
+          f"{kv}; random weights — output is noise; the engine is real)")
     reqs = [Request(p, max_new_tokens=args.max_new,
                     temperature=args.temperature) for p in args.prompts]
     if args.static:

@@ -28,7 +28,7 @@ from repro.models.pdefs import (
 from repro.models.shardctx import constrain
 from repro.models.stacks import (
     Segment, run_segments_decode, run_segments_full, segments_cache_defs,
-    segments_param_defs,
+    segments_paged_cache_defs, segments_param_defs,
 )
 
 
@@ -162,6 +162,18 @@ class Model:
         cd = segments_cache_defs(self.dec_segments, batch, self.max_seq)
         return cd
 
+    def paged_cache_defs(self, num_pages: int, page_size: int):
+        """Page-arena defs ([num_pages, page_size, ...] per layer, no batch
+        axis) for block-granular KV paging; None when any decoder segment
+        only supports contiguous lanes (windows, quantized caches, SSM/RWKV
+        state, cross-attention memories)."""
+        return segments_paged_cache_defs(self.dec_segments, num_pages,
+                                         page_size)
+
+    @property
+    def supports_paged_cache(self) -> bool:
+        return self.paged_cache_defs(1, 8) is not None
+
     def extra_input_defs(self, batch: int):
         """Stubbed modality inputs (DESIGN.md: the one allowed stub)."""
         cfg = self.cfg
@@ -266,12 +278,29 @@ class Model:
 
     def decode_step(self, params, cache, tokens1, positions):
         """tokens1 [B,1]; positions [B] (position of this token)."""
+        return self._decode_step(params, cache, tokens1, positions, None, 0)
+
+    def decode_step_paged(self, params, cache, tokens1, positions,
+                          page_table, *, page_size: int):
+        """Paged-cache decode step: ``cache`` leaves are page arenas and
+        ``page_table [B, n_pages]`` maps each row's logical pages to physical
+        page ids (trash-page 0 past its allocation)."""
+        assert self.supports_paged_cache, \
+            f"{self.cfg.arch_id}: decoder has non-pageable cache segments"
+        return self._decode_step(params, cache, tokens1, positions,
+                                 page_table, page_size)
+
+    def _decode_step(self, params, cache, tokens1, positions, page_table,
+                     page_size):
         cfg = self.cfg
         x1 = self._embed(params, tokens1)
         if cfg.family == "encdec":
             x1 = x1 + jnp.take(params["dec_pos"], positions, axis=0)[:, None]
         lengths = positions + 1
         ctx = self._ctx("decode", positions, lengths=lengths, params=params)
+        if page_table is not None:
+            ctx["page_table"] = page_table
+            ctx["page_size"] = page_size
         x1, new_cache, _ = run_segments_decode(params, x1, self.dec_segments,
                                                ctx, cache)
         x1 = F.rms_norm(x1, params["final_norm"], cfg.rms_eps)

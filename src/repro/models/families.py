@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.decode_attention.ops import paged_decode_attention
 from repro.models import mla as mla_mod
 from repro.models import mamba2 as m2
 from repro.models import rwkv6 as rw
@@ -43,6 +44,17 @@ def _kv_cache_defs(B: int, S: int, n_kv: int, hd: int, dtype=jnp.bfloat16,
     return {
         "k": ParamDef((B, S, n_kv, hd), ax, dtype, init="zeros"),
         "v": ParamDef((B, S, n_kv, hd), ax, dtype, init="zeros"),
+    }
+
+
+def _kv_arena_defs(P: int, ps: int, n_kv: int, hd: int, dtype=jnp.bfloat16):
+    """Paged layout: one global page arena per layer instead of per-slot
+    lanes. Logical position t of a request lives at
+    ``arena[page_table[slot, t // ps], t % ps]``."""
+    ax = ("pages", "page_seq", "kv_heads", None)
+    return {
+        "k": ParamDef((P, ps, n_kv, hd), ax, dtype, init="zeros"),
+        "v": ParamDef((P, ps, n_kv, hd), ax, dtype, init="zeros"),
     }
 
 
@@ -151,13 +163,29 @@ def make_attn_layer(cfg: ModelConfig, *, window: int = 0, ffn: str = "dense",
         q, k, v = qkv(p["attn"], h)                  # [B,1,H,hd]
         q = apply_rope(q, pos[:, None], theta)
         k = apply_rope(k, pos[:, None], theta)
-        ring_w = window if (window and ce["k"].shape[1] == window) else 0
         packed = _pack(k, v)
-        new_ce = {name: _write_decode(ce[name], packed[name], pos, ring_w)
-                  for name in packed}
-        kc, vc = _unpack(new_ce)
-        a = decode_attention(q[:, 0], kc, vc, ctx["lengths"],
-                             n_kv=KV, window=window, ring=bool(ring_w))
+        if ctx.get("page_table") is not None:
+            # paged layout: ce leaves are [P, page_size, KV, hd] arenas;
+            # scatter this token at its slot's physical (page, offset) and
+            # attend through the page table. The allocator guarantees every
+            # active slot owns distinct pages, so the scatter never races;
+            # inactive slots park on the trash page (id 0, never read).
+            ps_sz = ctx["page_size"]
+            pt = ctx["page_table"]                   # [B, n_pages] int32
+            phys = jnp.take_along_axis(
+                pt, (pos // ps_sz)[:, None], axis=1)[:, 0]
+            new_ce = {name: ce[name].at[phys, pos % ps_sz].set(
+                          packed[name][:, 0].astype(ce[name].dtype))
+                      for name in packed}
+            a = paged_decode_attention(q[:, 0], new_ce["k"], new_ce["v"],
+                                       pt, ctx["lengths"])
+        else:
+            ring_w = window if (window and ce["k"].shape[1] == window) else 0
+            new_ce = {name: _write_decode(ce[name], packed[name], pos, ring_w)
+                      for name in packed}
+            kc, vc = _unpack(new_ce)
+            a = decode_attention(q[:, 0], kc, vc, ctx["lengths"],
+                                 n_kv=KV, window=window, ring=bool(ring_w))
         x1 = x1 + out_proj(p["attn"], a[:, None])
         x1, aux = _ffn_apply(p, x1)
         return x1, new_ce, aux
@@ -166,7 +194,14 @@ def make_attn_layer(cfg: ModelConfig, *, window: int = 0, ffn: str = "dense",
         S_eff = min(window, S) if window else S
         return _kv_cache_defs(B, S_eff, KV, hd, dt, quant)
 
-    return defs, fwd_full, fwd_decode, cache_defs
+    # block-granular paged cache: full-context bf16 GQA only — a ring-buffer
+    # window already bounds memory, and int8 paging would need scale arenas
+    paged_cache_defs = None
+    if not window and not quant:
+        def paged_cache_defs(num_pages, page_size):
+            return _kv_arena_defs(num_pages, page_size, KV, hd, dt)
+
+    return defs, fwd_full, fwd_decode, cache_defs, paged_cache_defs
 
 
 # ---------------------------------------------------------------------------
@@ -465,7 +500,7 @@ def make_unit(layer_makers):
 
 def make_stacked_sublayer(maker, n: int):
     """A sub-layer that is itself an inner scanned stack of n layers."""
-    dfs, f_full, f_dec, cdefs = maker
+    dfs, f_full, f_dec, cdefs = maker[:4]
 
     def defs():
         return stack(dfs(), n)
@@ -495,5 +530,5 @@ def make_stacked_sublayer(maker, n: int):
 __all__ = [
     "make_attn_layer", "make_mla_layer", "make_cross_layer",
     "make_mamba_layer", "make_rwkv_layer", "make_bidir_layer", "make_unit",
-    "make_stacked_sublayer", "_kv_cache_defs",
+    "make_stacked_sublayer", "_kv_cache_defs", "_kv_arena_defs",
 ]

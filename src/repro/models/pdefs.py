@@ -114,6 +114,10 @@ DEFAULT_RULES = {
     "batch": ("pod", "data"),
     "cache_seq": (),
     "frames": (),
+    # paged KV arenas: replicated today; a multi-host sharded arena would
+    # shard "pages" over ("pod", "data") once page ids are mesh-local
+    "pages": (),
+    "page_seq": (),
 }
 
 

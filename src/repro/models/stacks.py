@@ -26,13 +26,18 @@ from repro.models.pdefs import ParamDef, stack, abstract_from_defs
 @dataclass
 class Segment:
     """Field order matches the family maker tuples:
-    (defs, fwd_full, fwd_decode, cache_defs)."""
+    (defs, fwd_full, fwd_decode, cache_defs[, paged_cache_defs]).
+
+    ``paged_cache_defs(num_pages, page_size)`` describes the layer's slice
+    of a global page arena (no batch axis — slots map into it through a page
+    table); None means the layer only supports contiguous per-slot lanes."""
     name: str
     n: int
     defs: Callable[[], Any]
     fwd_full: Callable
     fwd_decode: Callable
     cache_defs: Callable[[int, int], Any]
+    paged_cache_defs: Optional[Callable[[int, int], Any]] = None
     scan: bool = True
 
 
@@ -50,6 +55,23 @@ def segments_cache_defs(segments: List[Segment], batch: int, seq: int):
         cd = s.cache_defs(batch, seq)
         if not cd:
             continue
+        out[s.name] = stack(cd, s.n) if (s.scan and s.n > 1) else cd
+    return out
+
+
+def segments_paged_cache_defs(segments: List[Segment], num_pages: int,
+                              page_size: int):
+    """Paged-arena defs mirroring :func:`segments_cache_defs`'s structure,
+    or None when any caching segment lacks paged support."""
+    out = {}
+    for s in segments:
+        if not s.cache_defs(1, page_size):
+            continue                      # stateless segment (e.g. encoder)
+        if s.paged_cache_defs is None:
+            return None
+        cd = s.paged_cache_defs(num_pages, page_size)
+        if cd is None:
+            return None
         out[s.name] = stack(cd, s.n) if (s.scan and s.n > 1) else cd
     return out
 
@@ -114,5 +136,5 @@ def run_segments_decode(params, x1, segments: List[Segment], ctx, cache):
 
 __all__ = [
     "Segment", "segments_param_defs", "segments_cache_defs",
-    "run_segments_full", "run_segments_decode",
+    "segments_paged_cache_defs", "run_segments_full", "run_segments_decode",
 ]

@@ -1,31 +1,46 @@
-"""Continuous-batching serving engine with a slot-based KV-cache pool.
+"""Continuous-batching serving engine with a block-granular paged KV-cache.
 
 This is the engine that runs at edge nodes (reduced SLM) and — in pod
-deployment — behind the cloud tier. It replaces the old static-batch path
-(pad a batch, block until every sequence finishes, re-trace per batch
-shape) with a fixed-capacity slot pool:
+deployment — behind the cloud tier. Requests stream through a fixed pool of
+``max_batch`` slots; the KV-cache behind those slots comes in two layouts:
 
-* ``max_batch`` slots, each owning one lane of a persistent KV-cache pool
-  (allocated once at ``[max_batch, max_seq, ...]`` per layer), a position
-  counter, and per-request sampling state (temperature, pending token).
-* Requests are admitted into free slots at step boundaries via per-slot
-  prefill-into-cache: a batch-1 prefill (chunk-padded to a ``q_chunk``
-  multiple) produces a cache already padded to ``max_seq``, which a single
-  fixed-shape scatter writes into the slot's lane.
-* ``step()`` runs ONE fused decode for all slots at the fixed shape
-  ``[max_batch, 1]`` with an active-slot mask on the host side; finished
-  sequences free their slot mid-decode so the scheduler can admit queued
-  work without waiting for the rest of the batch.
+* ``paged`` (default where the model supports it) — one global page arena
+  per layer, ``[num_pages + 1, page_size, KV, hd]``, plus a host-side
+  per-slot page table ``[max_batch, max_seq // page_size]`` of physical page
+  ids. A slot reserves only ``ceil((prompt + decode_budget) / page_size)``
+  pages at admission, so short requests no longer strand a worst-case
+  ``max_seq`` lane and the number of *resident* requests is bounded by
+  actual token demand, not by ``max_batch x max_seq`` worst-case memory.
+  Physical page 0 is the trash page: table entries past a slot's allocation
+  point at it, keeping every scatter/gather fixed-shape. Invariants:
 
-All jitted functions therefore run at fixed shapes — decode, sampling and
-slot-insert compile exactly once per engine config; prefill compiles once
-per ``q_chunk`` bucket. ``trace_counts`` exposes the per-function trace
-counters so tests and benchmarks can assert compile stability.
+  - the :class:`~repro.serving.paging.PageAllocator` (host numpy free-list)
+    hands each active slot *distinct* pages — device scatters never race;
+  - pages are reserved for prompt + full decode budget at admission, so a
+    resident request can always run to completion (no mid-decode eviction);
+  - page tables ride into the jitted decode as a fixed-shape ``[max_batch,
+    pages_per_slot]`` int32 argument — remapping slots never re-traces;
+  - completed slots return their pages to the free list before the next
+    admission round.
 
-Decode budgets are per-slot: each request may emit up to
-``min(max_new_tokens, max_seq - prompt_len)`` tokens — a short prompt in a
-mixed batch is no longer clamped by the longest prompt (the old
-static-batch bug), nor stretched to the batch-max ``max_new_tokens``.
+* ``contiguous`` — the PR-1 layout, one persistent ``[max_batch, max_seq,
+  ...]`` lane per slot. Kept as the numerical/throughput baseline (see
+  ``benchmarks/serving_bench.py``) and as the fallback for models whose
+  decoder state cannot be paged (sliding-window rings, int8 caches, SSM /
+  RWKV state, cross-attention memories).
+
+Admission via :meth:`admit` requires :meth:`can_admit` — a free slot AND, in
+paged mode, enough free pages for the request's prompt + budget. Prefill is
+per-slot (batch-1, chunk-padded) and its cache is scattered into freshly
+allocated pages (or the slot's lane) by a single fixed-shape insert;
+``step()`` runs ONE fused decode for all slots at ``[max_batch, 1]``.
+
+All jitted functions run at fixed shapes — decode, sampling and insert
+compile exactly once per engine config; prefill compiles once per
+``q_chunk`` bucket. ``trace_counts`` exposes per-function trace counters so
+tests and benchmarks can assert compile stability. Decode budgets stay
+per-slot: each request may emit up to ``min(max_new_tokens, max_seq -
+prompt_len)`` tokens.
 """
 from __future__ import annotations
 
@@ -41,6 +56,7 @@ from repro.configs.base import ModelConfig
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.api import Model, build_model
 from repro.models.pdefs import is_pdef
+from repro.serving.paging import TRASH_PAGE, PageAllocator, pages_needed
 
 
 @dataclass
@@ -78,19 +94,25 @@ class EngineCompletion:
 class _Slot:
     req_id: int
     request: Request
-    budget: int                  # per-slot decode budget (satellite fix)
+    budget: int                  # per-slot decode budget
     prompt_tokens: int
     pending: int                 # sampled, not yet emitted/fed token
     admitted_at: float
+    page_ids: Optional[np.ndarray] = None   # physical pages owned (paged)
     out_ids: List[int] = field(default_factory=list)
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees, is_leaf=is_pdef)
 
 
 class ServingEngine:
     """One model instance serving a continuously-batched slot pool."""
 
     def __init__(self, cfg: ModelConfig, *, max_seq: int = 512,
-                 max_batch: int = 8, seed: int = 0,
-                 params=None):
+                 max_batch: int = 8, seed: int = 0, params=None,
+                 kv_layout: str = "auto", page_size: int = 16,
+                 num_pages: Optional[int] = None):
         self.cfg = cfg
         self.max_seq = max_seq
         self.max_batch = max_batch
@@ -101,12 +123,52 @@ class ServingEngine:
             jax.random.PRNGKey(seed))
         self._key = jax.random.PRNGKey(seed + 1)
 
-        # ---- persistent KV-cache pool: one lane per slot ------------------
-        pool_defs = self.model.cache_defs(max_batch)
-        self._batch_ax = jax.tree_util.tree_map(
-            lambda d: d.axes.index("batch"), pool_defs, is_leaf=is_pdef)
-        self._cache = jax.tree_util.tree_map(
-            lambda d: jnp.zeros(d.shape, d.dtype), pool_defs, is_leaf=is_pdef)
+        assert kv_layout in ("auto", "paged", "contiguous"), kv_layout
+        if kv_layout == "auto":
+            kv_layout = ("paged" if self.model.supports_paged_cache
+                         else "contiguous")
+        if kv_layout == "paged" and not self.model.supports_paged_cache:
+            raise ValueError(
+                f"{cfg.arch_id}: decoder cache cannot be paged "
+                "(window/int8/SSM/cross state); use kv_layout='contiguous'")
+        self.kv_layout = kv_layout
+
+        lane_defs = self.model.cache_defs(1)     # batch-1 prefill lane
+        if kv_layout == "paged":
+            assert page_size % 8 == 0, "page_size must keep the 8-row layout"
+            assert max_seq % page_size == 0, (max_seq, page_size)
+            self.page_size = page_size
+            self.pages_per_slot = max_seq // page_size
+            self.num_pages = (max_batch * self.pages_per_slot
+                              if num_pages is None else num_pages)
+            assert self.num_pages >= self.pages_per_slot, \
+                "pool must fit at least one worst-case request"
+            # ---- page arena (+1: trash page 0) + host page state ----------
+            arena_defs = self.model.paged_cache_defs(self.num_pages + 1,
+                                                     page_size)
+            self._cache = _tmap(lambda d: jnp.zeros(d.shape, d.dtype),
+                                arena_defs)
+            self._page_ax = _tmap(lambda d: d.axes.index("pages"), arena_defs)
+            self._pseq_ax = _tmap(lambda d: d.axes.index("page_seq"),
+                                  arena_defs)
+            self._allocator = PageAllocator(self.num_pages)
+            self._page_tables = np.full(
+                (max_batch, self.pages_per_slot), TRASH_PAGE, np.int32)
+        else:
+            self.page_size = None
+            self.pages_per_slot = None
+            self.num_pages = None
+            self._allocator = None
+            self._page_tables = None
+            # ---- persistent KV-cache pool: one lane per slot --------------
+            pool_defs = self.model.cache_defs(max_batch)
+            self._batch_ax = _tmap(lambda d: d.axes.index("batch"), pool_defs)
+            self._cache = _tmap(lambda d: jnp.zeros(d.shape, d.dtype),
+                                pool_defs)
+        self._lane_b_ax = _tmap(lambda d: d.axes.index("batch"), lane_defs)
+        self._lane_s_ax = _tmap(
+            lambda d: d.axes.index("cache_seq") if "cache_seq" in d.axes
+            else -1, lane_defs)
 
         # ---- host-side slot state -----------------------------------------
         self._slots: List[Optional[_Slot]] = [None] * max_batch
@@ -114,6 +176,8 @@ class ServingEngine:
         self._positions = np.zeros(max_batch, np.int32)
         self._temps = np.zeros(max_batch, np.float32)
         self._next_req_id = 0
+        self._plan_cache = None   # one-entry (request, plan) memo
+        self.peak_active = 0      # high-water mark of resident requests
         self.prefill_s = 0.0      # cumulative engine-lifetime timers
         self.decode_s = 0.0
 
@@ -131,6 +195,12 @@ class ServingEngine:
         def _decode_fn(params, cache, tokens1, positions):
             self.trace_counts["decode"] += 1
             return self.model.decode_step(params, cache, tokens1, positions)
+
+        def _decode_paged_fn(params, cache, tokens1, positions, page_tables):
+            self.trace_counts["decode"] += 1
+            return self.model.decode_step_paged(
+                params, cache, tokens1, positions, page_tables,
+                page_size=self.page_size)
 
         def _sample_fn(logits, temps, key):
             self.trace_counts["sample"] += 1
@@ -151,19 +221,47 @@ class ServingEngine:
 
             return jax.tree_util.tree_map(put, pool, one, self._batch_ax)
 
-        # donate the cache pool through decode/insert so XLA updates it in
-        # place instead of copying [layers, max_batch, max_seq, ...] per
-        # token (CPU doesn't implement donation and would warn)
+        def _insert_paged_fn(arena, lane, page_row):
+            """Chop the batch-1 prefill lane into page_size chunks and
+            scatter them at the slot's physical page ids. ``page_row`` is
+            always the full ``[pages_per_slot]`` row (fixed shape); entries
+            past the allocation are TRASH_PAGE, so the surplus lane chunks
+            land in trash."""
+            self.trace_counts["insert"] += 1
+            ps = self.page_size
+
+            def put(big, small, p_ax, s_ax, b_ax, q_ax):
+                sm = jnp.moveaxis(small, b_ax, 0)[0]          # drop batch
+                sq = q_ax - 1 if b_ax < q_ax else q_ax
+                sm = jnp.moveaxis(sm, sq, 0)                  # [S, rest...]
+                sm = sm.reshape((sm.shape[0] // ps, ps) + sm.shape[1:])
+                bg = jnp.moveaxis(big, (p_ax, s_ax), (0, 1))
+                bg = bg.at[page_row].set(sm.astype(bg.dtype))
+                return jnp.moveaxis(bg, (0, 1), (p_ax, s_ax))
+
+            return jax.tree_util.tree_map(
+                put, arena, lane, self._page_ax, self._pseq_ax,
+                self._lane_b_ax, self._lane_s_ax)
+
+        # donate the cache pool/arena through decode/insert so XLA updates
+        # it in place instead of copying the whole pool per token (CPU
+        # doesn't implement donation and would warn)
         donate = jax.default_backend() != "cpu"
         self._prefill = jax.jit(_prefill_fn)
-        self._decode = jax.jit(_decode_fn,
-                               donate_argnums=(1,) if donate else ())
         self._sample = jax.jit(_sample_fn)
-        self._insert = jax.jit(_insert_fn,
-                               donate_argnums=(0,) if donate else ())
+        if kv_layout == "paged":
+            self._decode = jax.jit(_decode_paged_fn,
+                                   donate_argnums=(1,) if donate else ())
+            self._insert = jax.jit(_insert_paged_fn,
+                                   donate_argnums=(0,) if donate else ())
+        else:
+            self._decode = jax.jit(_decode_fn,
+                                   donate_argnums=(1,) if donate else ())
+            self._insert = jax.jit(_insert_fn,
+                                   donate_argnums=(0,) if donate else ())
 
     # ------------------------------------------------------------------
-    # Slot-pool introspection
+    # Slot-pool / page-pool introspection
     # ------------------------------------------------------------------
     @property
     def free_slots(self) -> int:
@@ -181,18 +279,67 @@ class ServingEngine:
     def decode_traces(self) -> int:
         return self.trace_counts["decode"]
 
+    @property
+    def free_pages(self) -> Optional[int]:
+        return self._allocator.free_pages if self._allocator else None
+
+    @property
+    def kv_cache_tokens(self) -> int:
+        """Token capacity of the KV memory (paged: usable pages; contiguous:
+        the full slot pool)."""
+        if self.kv_layout == "paged":
+            return self.num_pages * self.page_size
+        return self.max_batch * self.max_seq
+
+    @property
+    def kv_cache_bytes(self) -> int:
+        return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(
+            self._cache)))
+
     # ------------------------------------------------------------------
-    # Continuous-batching API: admit / step
+    # Continuous-batching API: can_admit / admit / step
     # ------------------------------------------------------------------
-    def admit(self, request: Request) -> int:
-        """Prefill one request into a free slot's cache lane. Returns the
-        engine-local request id used in :class:`EngineCompletion`."""
-        slot = next((i for i, s in enumerate(self._slots) if s is None), None)
-        if slot is None:
-            raise RuntimeError("no free slot; check free_slots before admit")
+    def _plan(self, request: Request) -> Tuple[List[int], int, int]:
+        """(encoded prompt, decode budget, pages needed). Memoized for the
+        last request seen: a queue head blocked on pages is re-planned by
+        ``can_admit`` every decode step, and ``admit`` re-plans right after
+        the ``can_admit`` that green-lit it."""
+        cached = self._plan_cache
+        if cached is not None and cached[0] is request:
+            return cached[1]
         enc = self.tok.encode(request.prompt)[: self.max_seq - 1]
         L = len(enc)
         budget = max(0, min(request.max_new_tokens, self.max_seq - L))
+        need = (pages_needed(L + budget, self.page_size)
+                if self.kv_layout == "paged" else 0)
+        self._plan_cache = (request, (enc, budget, need))
+        return enc, budget, need
+
+    def can_admit(self, request: Request) -> bool:
+        """A free slot AND (paged) enough free pages for prompt + budget.
+        Because pages are reserved through a request's whole budget, an
+        engine draining its residents always becomes admissible again."""
+        if self.free_slots == 0:
+            return False
+        if self.kv_layout != "paged":
+            return True
+        _, _, need = self._plan(request)
+        return need <= self._allocator.free_pages
+
+    def admit(self, request: Request) -> int:
+        """Prefill one request into a free slot (paged: into freshly
+        allocated pages). Returns the engine-local request id used in
+        :class:`EngineCompletion`. Callers gate on :meth:`can_admit`."""
+        slot = next((i for i, s in enumerate(self._slots) if s is None), None)
+        if slot is None:
+            raise RuntimeError("no free slot; check can_admit before admit")
+        enc, budget, need = self._plan(request)
+        L = len(enc)
+        page_ids = None
+        if self.kv_layout == "paged":
+            page_ids = self._allocator.alloc(need)     # raises if exhausted
+            row = np.full(self.pages_per_slot, TRASH_PAGE, np.int32)
+            row[:need] = page_ids
         qc = max(self.cfg.q_chunk, 1)
         pad_len = min(-(-L // qc) * qc, self.max_seq)
         tokens, lengths = self.tok.pad_batch([enc], pad_len)
@@ -200,7 +347,11 @@ class ServingEngine:
         t0 = time.perf_counter()
         logits, lane = self._prefill(self.params, jnp.asarray(tokens),
                                      jnp.asarray(lengths))
-        self._cache = self._insert(self._cache, lane, np.int32(slot))
+        if self.kv_layout == "paged":
+            self._cache = self._insert(self._cache, lane, jnp.asarray(row))
+            self._page_tables[slot] = row
+        else:
+            self._cache = self._insert(self._cache, lane, np.int32(slot))
         self._key, sub = jax.random.split(self._key)
         first = self._sample(logits,
                              jnp.asarray([request.temperature], jnp.float32),
@@ -211,16 +362,18 @@ class ServingEngine:
         rid = self._next_req_id
         self._next_req_id += 1
         self._slots[slot] = _Slot(rid, request, budget, L, pending,
-                                  admitted_at=time.perf_counter())
+                                  admitted_at=time.perf_counter(),
+                                  page_ids=page_ids)
         self._tokens[slot] = pending
         self._positions[slot] = L
         self._temps[slot] = request.temperature
+        self.peak_active = max(self.peak_active, self.active_slots)
         return rid
 
     def step(self) -> List[EngineCompletion]:
         """One pump of the pool: harvest pending tokens (retiring finished
-        sequences, freeing their slots), then run ONE fixed-shape decode
-        for whatever remains active."""
+        sequences, freeing their slot and pages), then run ONE fixed-shape
+        decode for whatever remains active."""
         done: List[EngineCompletion] = []
         now = time.perf_counter()
         for i, s in enumerate(self._slots):
@@ -240,10 +393,12 @@ class ServingEngine:
 
         if self.has_active:
             t0 = time.perf_counter()
-            logits, self._cache = self._decode(
-                self.params, self._cache,
-                jnp.asarray(self._tokens)[:, None],
-                jnp.asarray(self._positions))
+            args = (self.params, self._cache,
+                    jnp.asarray(self._tokens)[:, None],
+                    jnp.asarray(self._positions))
+            if self.kv_layout == "paged":
+                args += (jnp.asarray(self._page_tables),)
+            logits, self._cache = self._decode(*args)
             self._key, sub = jax.random.split(self._key)
             nxt = np.asarray(jax.block_until_ready(
                 self._sample(logits, jnp.asarray(self._temps), sub)))
@@ -257,6 +412,10 @@ class ServingEngine:
         return done
 
     def _free(self, slot: int) -> None:
+        s = self._slots[slot]
+        if s is not None and s.page_ids is not None:
+            self._allocator.free(s.page_ids)
+            self._page_tables[slot] = TRASH_PAGE
         self._slots[slot] = None
         self._tokens[slot] = self.tok.pad_id
         self._positions[slot] = 0     # inactive lanes park at position 0
@@ -268,15 +427,17 @@ class ServingEngine:
     def generate(self, requests: Sequence[Request]
                  ) -> Tuple[List[str], GenStats]:
         """Continuously-batched generation: requests are admitted as slots
-        free up, so any number of requests stream through ``max_batch``
-        lanes. Output order matches input order."""
+        (and pages) free up, so any number of requests stream through
+        ``max_batch`` lanes. Output order matches input order."""
         return self._pump_all(requests, continuous=True)
 
     def generate_static(self, requests: Sequence[Request]
                         ) -> Tuple[List[str], GenStats]:
         """Static-batch baseline: admit one batch (<= max_batch), then block
         until EVERY sequence finishes — no mid-decode admission. Kept for
-        benchmarking and equivalence testing against the continuous path."""
+        benchmarking and equivalence testing against the continuous path.
+        With a deliberately small page pool the batch may not fit at once;
+        size ``num_pages`` for the worst case when using this path."""
         assert 0 < len(requests) <= self.max_batch
         return self._pump_all(requests, continuous=False)
 
@@ -292,7 +453,7 @@ class ServingEngine:
                 rid_to_idx[self.admit(r)] = i
             queue = []
         while queue or self.has_active:
-            while continuous and queue and self.free_slots:
+            while continuous and queue and self.can_admit(queue[0]):
                 req = queue.pop(0)
                 rid_to_idx[self.admit(req)] = len(requests) - len(queue) - 1
             for ec in self.step():
@@ -314,28 +475,40 @@ class ServingEngine:
         buckets = sorted({min(-(-max(n, 1) // qc) * qc, self.max_seq)
                           for n in prompt_lens})
         key = jax.random.PRNGKey(0)
+        paged = self.kv_layout == "paged"
         # rebind the pool at every call: the cache argument is donated, so
         # the old buffer is dead after each decode/insert (pool is idle —
-        # lanes are rewritten on admission, scribbles don't matter)
+        # a paged warmup scribbles only on the trash page, a contiguous one
+        # on lane 0, which is rewritten on admission)
         for pad_len in buckets:
             toks = jnp.zeros((1, pad_len), jnp.int32)
             logits, lane = self._prefill(self.params, toks,
                                          jnp.asarray([pad_len], jnp.int32))
-            self._cache = self._insert(self._cache, lane, np.int32(0))
+            if paged:
+                trash_row = jnp.full((self.pages_per_slot,), TRASH_PAGE,
+                                     jnp.int32)
+                self._cache = self._insert(self._cache, lane, trash_row)
+            else:
+                self._cache = self._insert(self._cache, lane, np.int32(0))
             self._sample(logits, jnp.asarray([0.0], jnp.float32), key)
-        _, self._cache = self._decode(self.params, self._cache,
-                                      jnp.asarray(self._tokens)[:, None],
-                                      jnp.asarray(self._positions))
+        args = (self.params, self._cache,
+                jnp.asarray(self._tokens)[:, None],
+                jnp.asarray(self._positions))
+        if paged:
+            args += (jnp.asarray(self._page_tables),)
+        _, self._cache = self._decode(*args)
         self._sample(jnp.zeros((self.max_batch, self.cfg.vocab), jnp.float32),
                      jnp.asarray(self._temps), key)
 
 
 def make_edge_engine(*, max_seq: int = 512, max_batch: int = 8,
-                     seed: int = 0) -> ServingEngine:
-    """Default edge SLM: reduced qwen2-0.5b (byte vocab capable)."""
+                     seed: int = 0, **kw) -> ServingEngine:
+    """Default edge SLM: reduced qwen2-0.5b (byte vocab capable). Extra
+    keyword args (kv_layout, page_size, num_pages, ...) pass through."""
     from repro.configs import get_config
     cfg = get_config("qwen2-0.5b", reduced=True)
-    return ServingEngine(cfg, max_seq=max_seq, max_batch=max_batch, seed=seed)
+    return ServingEngine(cfg, max_seq=max_seq, max_batch=max_batch, seed=seed,
+                         **kw)
 
 
 __all__ = ["ServingEngine", "Request", "GenStats", "EngineCompletion",

@@ -1,0 +1,68 @@
+"""Host-side page allocator for the paged KV-cache.
+
+The device holds one page arena per layer (``[num_pages + 1, page_size,
+...]``); this module owns the *ids*. Physical page 0 is reserved as the
+trash page: page-table entries beyond a slot's allocation point at it, so
+fixed-shape scatters can always write a full table row and fixed-shape
+gathers can always read one — writes land in trash, reads are masked by the
+per-row valid length.
+
+Allocation is a LIFO free-list in plain numpy/python — the allocator is
+consulted at admission/retirement only (host side, off the jit path), never
+per decode step.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+def pages_needed(tokens: int, page_size: int) -> int:
+    """Pages to reserve for a request that will occupy ``tokens`` cache
+    positions (prompt + decode budget)."""
+    return max(1, -(-tokens // page_size))
+
+
+class PageAllocator:
+    """Free-list over physical page ids ``1..num_pages`` (0 is trash)."""
+
+    def __init__(self, num_pages: int):
+        assert num_pages > 0
+        self.num_pages = num_pages
+        # LIFO: recently freed pages are reused first (warm in cache)
+        self._free: List[int] = list(range(num_pages, 0, -1))
+        self._free_set = set(self._free)    # O(1) double-free check
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> np.ndarray:
+        """Pop ``n`` distinct physical page ids; raises if unavailable —
+        callers gate on :attr:`free_pages` first (see ``can_admit``)."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, have {len(self._free)} "
+                f"of {self.num_pages}")
+        ids = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(ids)
+        return np.asarray(ids, np.int32)
+
+    def free(self, ids: Sequence[int]) -> None:
+        for pid in ids:
+            pid = int(pid)
+            assert pid != TRASH_PAGE, "freeing the trash page"
+            assert 1 <= pid <= self.num_pages, pid
+            assert pid not in self._free_set, f"double free of page {pid}"
+            self._free.append(pid)
+            self._free_set.add(pid)
+
+
+__all__ = ["PageAllocator", "pages_needed", "TRASH_PAGE"]

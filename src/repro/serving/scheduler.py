@@ -72,11 +72,18 @@ class TierScheduler:
     def pump(self) -> List[Completion]:
         """One scheduling round across every tier: fill free slots from the
         deadline heap, advance each engine one decode step, and return the
-        requests that finished this round."""
+        requests that finished this round.
+
+        Admission asks the engine via ``can_admit`` — a free slot AND, for a
+        paged KV-cache, enough free pages for the request's prompt + decode
+        budget. Admission stays strictly deadline-ordered: if the head
+        request doesn't fit, later (larger-deadline) requests wait behind it
+        rather than jumping the queue, so a big request can't be starved by
+        a stream of small ones."""
         out: List[Completion] = []
         for tier, eng in self.engines.items():
             q = self._queues[tier]
-            while q and eng.free_slots > 0:
+            while q and eng.can_admit(q[0].request):
                 item = heapq.heappop(q)
                 item.queue_wait_s = time.perf_counter() - item.enqueued_at
                 rid = eng.admit(item.request)

@@ -5,8 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, paged_decode_attention_pallas,
+)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref, paged_decode_attention_ref,
+)
 from repro.kernels.retrieval_topk.kernel import retrieval_topk_pallas
 from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
 from repro.kernels.rbf.kernel import rbf_matrix_pallas
@@ -46,6 +51,126 @@ def test_decode_attention_length_mask_strict():
     k2 = k.at[:, 40:].set(999.0)
     v2 = v.at[:, 40:].set(-999.0)
     out2 = decode_attention_pallas(q, k2, v2, lengths)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+@pytest.mark.parametrize("S,block_s", [
+    (64, 256),     # S < block_s: used to collapse to a zero-size seq grid
+    (100, 256),    # S < block_s AND not an 8-multiple
+    (4, 256),      # S smaller than the minimum 8-row tile
+    (40, 16),      # ragged tail: S not a multiple of block_s
+])
+def test_decode_attention_block_clamp_regression(S, block_s):
+    """ops hardcoding block_s=256 must not yield S // block_s == 0 programs
+    (or silently drop a ragged tail) for short caches."""
+    B, H, KV, hd = 2, 4, 2, 64
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(k1, (B, H, hd))
+    k = jax.random.normal(k2, (B, S, KV, hd))
+    v = jax.random.normal(k3, (B, S, KV, hd))
+    lengths = jnp.array([S, max(1, S - 3)])
+    out = decode_attention_pallas(q, k, v, lengths, block_s=block_s)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    # the public dispatch with its default block_s must agree too
+    out2 = da_ops.decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("length", ["zero", "full", "ragged"])
+def test_decode_attention_length_edges(length):
+    """length=0 (defined: zeros), length=S, and length not a multiple of
+    block_s must all match the oracle."""
+    B, H, KV, hd, S, bs = 2, 4, 2, 64, 128, 32
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(k1, (B, H, hd))
+    k = jax.random.normal(k2, (B, S, KV, hd))
+    v = jax.random.normal(k3, (B, S, KV, hd))
+    lengths = {"zero": jnp.array([0, 0]),
+               "full": jnp.array([S, S]),
+               "ragged": jnp.array([bs - 5, S - 7])}[length]
+    out = decode_attention_pallas(q, k, v, lengths, block_s=bs)
+    ref = decode_attention_ref(q, k, v, lengths)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    if length == "zero":
+        assert (np.asarray(out) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Paged flash-decode
+# ---------------------------------------------------------------------------
+
+def _ragged_paged_cache(B, P, ps, KV, hd, pages_per_row, seed=0):
+    """Random arenas + page tables with distinct physical pages per row
+    (scattered, unordered) and trash-page-0 padding."""
+    rng = np.random.default_rng(seed)
+    k_arena = jnp.asarray(rng.normal(size=(P, ps, KV, hd)).astype(np.float32))
+    v_arena = jnp.asarray(rng.normal(size=(P, ps, KV, hd)).astype(np.float32))
+    n_pages = max(pages_per_row)
+    pt = np.zeros((B, n_pages), np.int32)
+    perm = rng.permutation(np.arange(1, P))
+    used = 0
+    for b, n in enumerate(pages_per_row):
+        pt[b, :n] = perm[used:used + n]
+        used += n
+    return k_arena, v_arena, jnp.asarray(pt)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_matches_paged_ref(dtype):
+    B, H, KV, hd, ps = 3, 8, 2, 64, 16
+    P = 32
+    k_arena, v_arena, pt = _ragged_paged_cache(B, P, ps, KV, hd, [6, 3, 1])
+    k_arena = k_arena.astype(dtype)
+    v_arena = v_arena.astype(dtype)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, H, hd), dtype)
+    lengths = jnp.array([6 * ps, 3 * ps - 5, 1], jnp.int32)
+    out = paged_decode_attention_pallas(q, k_arena, v_arena, pt, lengths)
+    ref = paged_decode_attention_ref(q, k_arena, v_arena, pt, lengths)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_paged_matches_contiguous_oracle_ragged_tables():
+    """Paged kernel output on a scattered arena == the contiguous oracle on
+    the logically reassembled cache, to fp32 tolerance."""
+    B, H, KV, hd, ps = 4, 8, 4, 64, 8
+    P = 64
+    k_arena, v_arena, pt = _ragged_paged_cache(B, P, ps, KV, hd,
+                                               [7, 5, 2, 1], seed=3)
+    n_pages = pt.shape[1]
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, H, hd))
+    lengths = jnp.array([7 * ps, 5 * ps - 3, ps + 1, 0], jnp.int32)
+    out = paged_decode_attention_pallas(q, k_arena, v_arena, pt, lengths)
+    k_c = k_arena[pt].reshape(B, n_pages * ps, KV, hd)
+    v_c = v_arena[pt].reshape(B, n_pages * ps, KV, hd)
+    ref = decode_attention_ref(q, k_c, v_c, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    assert (np.asarray(out)[3] == 0).all()        # length-0 row contract
+
+
+def test_paged_trash_page_contents_never_leak():
+    """Whatever lives in the trash page (id 0) and in pages past a row's
+    valid length must not influence the output."""
+    B, H, KV, hd, ps = 2, 4, 2, 64, 16
+    P = 16
+    k_arena, v_arena, pt = _ragged_paged_cache(B, P, ps, KV, hd, [4, 2])
+    q = jax.random.normal(jax.random.PRNGKey(4), (B, H, hd))
+    lengths = jnp.array([4 * ps - 9, 2 * ps - 1], jnp.int32)
+    out1 = paged_decode_attention_pallas(q, k_arena, v_arena, pt, lengths)
+    k2 = k_arena.at[0].set(999.0)                 # poison trash page
+    v2 = v_arena.at[0].set(-999.0)
+    # poison the tail of each row's last valid page too
+    k2 = k2.at[pt[0, 3], ps - 9:].set(777.0)
+    v2 = v2.at[pt[0, 3], ps - 9:].set(-777.0)
+    out2 = paged_decode_attention_pallas(q, k2, v2, pt, lengths)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
 
 
