@@ -2,18 +2,23 @@
 PY ?= python
 export PYTHONPATH := src:.
 
-.PHONY: test bench-smoke bench-serving bench-kernels
+.PHONY: test bench-smoke bench-serving bench-serving-smoke bench-kernels
 
 test:
 	$(PY) -m pytest -x -q
 
 # tiny-size benchmark smoke: serving (static vs continuous + paged vs
-# contiguous) + kernels
-bench-smoke: bench-kernels
+# contiguous + prefix-cache scenarios) + kernels
+bench-smoke: bench-kernels bench-serving-smoke
+
+# serving benchmark smoke (tiny config, prefix scenario included); leaves a
+# JSON artifact at results/benchmarks/serving_bench.json for CI to upload
+bench-serving-smoke:
 	$(PY) benchmarks/serving_bench.py --smoke --check
 
 # full-size serving benchmark with the acceptance checks (continuous >=1.5x
-# static; paged >=2x residents at equal KV memory, tokens/s within 5%)
+# static; paged >=2x residents at equal KV memory; prefix cache >=2x prefill
+# throughput at 90% shared prefix, token-identical, bounded prefill traces)
 bench-serving:
 	$(PY) benchmarks/serving_bench.py --check
 

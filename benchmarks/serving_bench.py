@@ -1,19 +1,28 @@
 """Serving benchmarks on a heavy-tailed mixed-length stream.
 
-Two comparisons over the SAME request mix (reduced qwen2-0.5b, byte
-tokenizer, prompt lengths 8..200, max_new_tokens 4..64, log-uniform):
+Three comparisons (reduced qwen2-0.5b, byte tokenizer):
 
 1. static vs continuous batching (PR 1): rigid ``max_batch`` batches with
    head-of-line blocking vs a TierScheduler streaming the slot pool.
-2. paged vs contiguous KV layout (this PR): a contiguous engine reserves a
+2. paged vs contiguous KV layout (PR 2): a contiguous engine reserves a
    worst-case ``[max_batch, max_seq]`` lane per slot; the paged engine gets
    the SAME KV token capacity as a page arena but 4x the slots, so resident
    requests are bounded by actual token demand instead of worst-case lanes.
    Reports tokens/s (target: within 5%), peak resident requests (target:
    >=2x at equal cache memory), KV bytes, and decode re-traces (must be 0).
+3. prefix-cached vs plain paged (this PR): the EACO-RAG edge scenario — N
+   requests grounded in the SAME retrieved context, sharing a long prompt
+   prefix at 0% / 50% / 90% share fractions. The prefix cache maps shared
+   pages + CoW tail and prefills only the unique suffix, so aggregate
+   prefill throughput (prompt tokens per engine prefill-second; shared
+   tokens count — they were served) rises with the share fraction and the
+   smaller per-request footprint packs more concurrent residents into the
+   same arena. Targets at 90% share: >=2x prefill throughput, more peak
+   residents, token-identical greedy output, zero decode retraces, prefill
+   traces bounded by the power-of-two bucket count.
 
-Both paths share warmed-up fixed-shape jitted functions, so the measured
-deltas are pure scheduling / memory layout.
+All paths share warmed-up fixed-shape jitted functions, so the measured
+deltas are pure scheduling / memory layout / prefill compute.
 
 Usage:  PYTHONPATH=src:. python benchmarks/serving_bench.py [--smoke] [--check]
 """
@@ -121,6 +130,9 @@ def run(quick: bool = False, n_requests: int = 64, max_batch: int = 8,
     rows += run_paged_vs_contiguous(n_requests=n_requests,
                                     base_batch=max_batch, max_seq=max_seq,
                                     seed=seed, quick=quick)
+    rows += run_prefix_scenarios(n_requests=n_requests,
+                                 max_batch=max_batch, max_seq=max_seq,
+                                 seed=seed, quick=quick)
     emit(rows, "serving_bench")
     if check:
         # tiny smoke runs are noisy: only the full-size bench gates on perf
@@ -134,6 +146,7 @@ def run(quick: bool = False, n_requests: int = 64, max_batch: int = 8,
         print(f"CHECK OK: speedup={speedup:.2f} (>={need}), zero decode "
               f"retraces, token counts match")
         _check_paged(rows, quick)
+        _check_prefix(rows, quick)
     return rows
 
 
@@ -175,6 +188,131 @@ def run_paged_vs_contiguous(*, n_requests: int, base_batch: int,
         "equal_kv_capacity": p["kv_capacity_tokens"] == c["kv_capacity_tokens"],
     })
     return rows
+
+
+def prefix_workload(n: int, share: float, prompt_len: int, max_new: int,
+                    seed: int):
+    """The EACO-RAG edge pattern: every request is grounded in the SAME
+    retrieved context (``share`` of the prompt) followed by a unique
+    question. share=0 degenerates to fully distinct prompts."""
+    rng = np.random.default_rng(seed)
+    letters = "abcdefghijklmnopqrstuvwxyz "
+    ctx_len = int(prompt_len * share)
+    ctx = "".join(letters[i] for i in rng.integers(len(letters), size=ctx_len))
+    reqs = []
+    for i in range(n):
+        tail_len = max(prompt_len - ctx_len, 4)
+        uniq = f"Q{i}:" + "".join(
+            letters[j] for j in rng.integers(len(letters), size=tail_len))
+        reqs.append(Request(ctx + uniq[:tail_len], max_new_tokens=max_new))
+    return reqs
+
+
+def run_prefix_scenarios(*, n_requests: int, max_batch: int, max_seq: int,
+                         seed: int, quick: bool):
+    """Prefix-heavy RAG scenario at several share fractions: prefix cache on
+    vs off on the SAME page arena, deliberately sized so page capacity (not
+    slots) binds residency — sharing must both cut prefill compute and pack
+    more concurrent residents."""
+    n_requests = max(8, n_requests // 2)   # gates don't need the full mix
+    prompt_len = 48 if quick else max(96, min(192, max_seq - 96))
+    max_new = 4 if quick else 8
+    pages_per_req = -(-(prompt_len + 1 + max_new) // PAGE_SIZE)
+    num_pages = max(max_seq // PAGE_SIZE,
+                    (2 if quick else 3) * pages_per_req)
+
+    rows = []
+    for share in (0.0, 0.5, 0.9):
+        reqs = prefix_workload(n_requests, share, prompt_len, max_new, seed)
+        outs = {}
+        for mode in ("off", "on"):
+            eng = make_edge_engine(max_seq=max_seq, max_batch=max_batch,
+                                   seed=0, page_size=PAGE_SIZE,
+                                   num_pages=num_pages,
+                                   prefix_cache=(mode == "on"))
+            eng.warmup([prompt_len + 1])   # every pow2 bucket <= its pad
+            traces0 = dict(eng.trace_counts)
+            t0 = time.perf_counter()
+            texts, stats = eng.generate(reqs)
+            wall = time.perf_counter() - t0
+            outs[mode] = texts
+            prefill_tput = (stats.prompt_tokens / stats.prefill_s
+                            if stats.prefill_s > 0 else 0.0)
+            rows.append({
+                "name": f"prefix-{mode}-{int(share * 100)}",
+                "share": share,
+                "requests": len(reqs),
+                "prompt_tokens": stats.prompt_tokens,
+                "prefill_s": round(stats.prefill_s, 3),
+                "prefill_tokens_per_s": round(prefill_tput, 1),
+                "wall_s": round(wall, 2),
+                "peak_resident": eng.peak_active,
+                "prefix_hits": stats.prefix_hits,
+                "prefix_misses": stats.prefix_misses,
+                "prefix_tokens_shared": stats.prefix_tokens_shared,
+                "prefix_hit_rate": round(stats.prefix_hit_rate, 3),
+                "prefill_traces_total": eng.trace_counts["prefill"],
+                "prefill_retraces_after_warmup":
+                    eng.trace_counts["prefill"] - traces0["prefill"],
+                "decode_retraces":
+                    eng.trace_counts["decode"] - traces0["decode"],
+                "pow2_buckets": len(eng.pad_buckets),
+            })
+        on = rows[-1]
+        off = rows[-2]
+        rows.append({
+            "name": f"prefix-summary-{int(share * 100)}",
+            "share": share,
+            "prefill_speedup": round(
+                on["prefill_tokens_per_s"] / off["prefill_tokens_per_s"], 2),
+            "resident_gain": on["peak_resident"] - off["peak_resident"],
+            "tokens_identical": outs["on"] == outs["off"],
+            "hit_rate": on["prefix_hit_rate"],
+        })
+    return rows
+
+
+def _check_prefix(rows, quick: bool):
+    """Acceptance gates for the prefix scenario. Timing gates only run at
+    full size (smoke runs are noise-dominated); identity/trace gates always
+    run."""
+    ok = True
+    msgs = []
+    for share in (0, 50, 90):
+        s = next(r for r in rows if r["name"] == f"prefix-summary-{share}")
+        on = next(r for r in rows if r["name"] == f"prefix-on-{share}")
+        off = next(r for r in rows if r["name"] == f"prefix-off-{share}")
+        if not s["tokens_identical"]:
+            ok = False
+            msgs.append(f"share {share}%: outputs differ with cache on")
+        if on["decode_retraces"] or off["decode_retraces"]:
+            ok = False
+            msgs.append(f"share {share}%: decode retraced")
+        for r in (on, off):
+            if r["prefill_traces_total"] > r["pow2_buckets"]:
+                ok = False
+                msgs.append(f"share {share}%: {r['name']} prefill traces "
+                            f"{r['prefill_traces_total']} > bucket bound "
+                            f"{r['pow2_buckets']}")
+    s90 = next(r for r in rows if r["name"] == "prefix-summary-90")
+    if not quick:
+        if s90["prefill_speedup"] < 2.0:
+            ok = False
+            msgs.append(f"90% share prefill speedup {s90['prefill_speedup']} "
+                        "< 2.0")
+        if s90["resident_gain"] <= 0:
+            ok = False
+            msgs.append("90% share did not raise peak residents")
+        if s90["hit_rate"] < 0.9:
+            ok = False
+            msgs.append(f"90% share hit rate {s90['hit_rate']} < 0.9")
+    if not ok:
+        print("PREFIX CHECK FAILED: " + "; ".join(msgs))
+        sys.exit(1)
+    print(f"PREFIX CHECK OK: 90% share prefill speedup "
+          f"{s90['prefill_speedup']}x, +{s90['resident_gain']} peak "
+          f"residents, hit rate {s90['hit_rate']}, token-identical, zero "
+          f"decode retraces, prefill traces within the pow2 bucket bound")
 
 
 def _check_paged(rows, quick: bool):

@@ -1,27 +1,36 @@
-"""Pallas TPU kernels: fused GQA flash-decode attention, contiguous + paged.
+"""Pallas TPU kernels: fused GQA flash attention against a KV cache —
+contiguous decode, paged decode, and paged *append* (chunked suffix
+prefill).
 
-One new query token per sequence attends to its KV cache with an
-online-softmax accumulation over sequence blocks — the serving hot loop.
+One online-softmax accumulation over sequence blocks serves three callers:
 
-Two cache layouts share one kernel body:
-
-* contiguous — ``k_cache/v_cache [B, S, KV, hd]``: the grid iterates
+* contiguous decode — ``k_cache/v_cache [B, S, KV, hd]``: the grid iterates
   (batch, kv_head, seq_block) and each program consumes one ``[block_s, hd]``
   cache tile.
-* paged — ``k_arena/v_arena [num_pages, page_size, KV, hd]`` plus a per-row
-  ``page_table [B, n_pages]`` of physical page ids: the grid's seq-block axis
-  indexes *through the page table* (one program per logical page) using
-  Pallas scalar prefetch, so the same online-softmax accumulators run over a
-  scattered arena without ever materializing a contiguous copy.
+* paged decode — ``k_arena/v_arena [num_pages, page_size, KV, hd]`` plus a
+  per-row ``page_table [B, n_pages]`` of physical page ids: the grid's
+  seq-block axis indexes *through the page table* (one program per logical
+  page) using Pallas scalar prefetch, so the same online-softmax
+  accumulators run over a scattered arena without materializing a
+  contiguous copy.
+* paged append — the multi-token sibling of paged decode, used by
+  prefix-cached suffix prefill: q is a ``[block_q, H, hd]`` chunk of new
+  tokens at absolute positions ``prefix_len + i``, and the grid's seq axis
+  chases the (scalar-prefetched) page table over *prefix + suffix* pages.
+  The causal mask lives entirely inside the q tile's position arithmetic:
+  key position <= query position admits every shared-prefix key and the
+  already-written part of the suffix, exactly like a causal prefill over
+  the logically reassembled cache.
 
 TPU adaptation (vs a CUDA warp-per-row decode kernel): each program instance
-processes a whole ``[BS, hd]`` cache tile from VMEM against the ``[G, hd]``
-query group on the MXU, with running max / sum-exp / weighted-value
-accumulators in VMEM scratch. hd is kept at a 128-lane multiple and BS at a
-multiple of 8 for the VPU/MXU layout. Masking uses the per-row valid length;
-probabilities AND values are zeroed outside it, so out-of-bounds tile padding
-(NaN in interpret mode, garbage on TPU) and ``length == 0`` rows (defined to
-return zeros) never reach the accumulators.
+processes a whole ``[BS, hd]`` cache tile from VMEM against the query tile
+(``[G, hd]`` for decode, ``[block_q * G, hd]`` for append) on the MXU, with
+running max / sum-exp / weighted-value accumulators in VMEM scratch. hd is
+kept at a 128-lane multiple and BS at a multiple of 8 for the VPU/MXU
+layout. Masking uses per-row valid lengths/positions; probabilities AND
+values are zeroed outside them, so out-of-bounds tile padding (NaN in
+interpret mode, garbage on TPU) and fully-masked rows (defined to return
+zeros) never reach the accumulators.
 """
 from __future__ import annotations
 
@@ -39,9 +48,34 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def _softmax_accumulate(q, k, v, valid, m_ref, l_ref, acc_ref, *,
+                        scale: float):
+    """One online-softmax block step, shared by decode and append.
+
+    q [R, hd], k/v [BS, hd] (f32), valid [R, BS] boolean keep-mask with the
+    caller's causal/length semantics baked in; running max / sum-exp /
+    weighted-value accumulators in VMEM scratch ([R, 1], [R, 1], [R, hd]).
+    The caller must zero v rows that can hold undefined data BEFORE calling
+    (0 * NaN would poison the p @ v product)."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[...]                                   # [R, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # masked probabilities are forced to exact 0 — a fully-masked tile would
+    # otherwise contribute exp(NEG_INF - NEG_INF) = 1 per position (NEG_INF
+    # is a finite sentinel) and a fully-masked row would average garbage
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)         # [R, BS]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
 def _flash_decode_body(len_ref, q_ref, k_ref, v_ref, o_ref,
                        m_ref, l_ref, acc_ref, *, block_s: int, scale: float):
-    """Shared online-softmax block step; grid axis 2 walks sequence tiles.
+    """Decode online-softmax block step; grid axis 2 walks sequence tiles.
 
     q_ref:   [G, hd]      (this batch row, this kv head's query group)
     k_ref:   [block_s, hd]
@@ -76,24 +110,10 @@ def _flash_decode_body(len_ref, q_ref, k_ref, v_ref, o_ref,
     pos_col = tile_start + jax.lax.broadcasted_iota(jnp.int32, (block_s, 1), 0)
     v = jnp.where(pos_col < length, v, 0.0)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    pos = tile_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = pos < length
-    s = jnp.where(valid, s, NEG_INF)
-
-    m_prev = m_ref[...]                                   # [G, 1]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    # masked probabilities are forced to exact 0 — a fully-masked tile would
-    # otherwise contribute exp(NEG_INF - NEG_INF) = 1 per position (NEG_INF
-    # is a finite sentinel) and a length-0 row would average garbage
-    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)         # [G, BS]
-    l_new = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
-    l_ref[...] = l_new
+    pos = tile_start + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], block_s), 1)
+    _softmax_accumulate(q, k, v, pos < length, m_ref, l_ref, acc_ref,
+                        scale=scale)
 
     @pl.when(s_idx == n_s - 1)
     def _done():
@@ -208,3 +228,129 @@ def paged_decode_attention_pallas(q, k_arena, v_arena, page_table, lengths, *,
         interpret=interpret,
     )(page_table, lengths, qg, k_arena, v_arena)
     return out.reshape(B, H, hd)
+
+
+def _paged_append_attn_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                              m_ref, l_ref, acc_ref, *, page_size: int,
+                              block_q: int, group: int, scale: float):
+    """Paged append (chunked suffix prefill). Grid: (n_q_chunks, KV,
+    n_pages) with the page axis innermost so the accumulators carry across
+    the whole logical sequence; the k/v BlockSpecs already chased the
+    scalar-prefetched page table, so the body only needs position
+    arithmetic.
+
+    q_ref: [block_q * G, hd] — row r is query token ``r // G`` of this
+    chunk, group member ``r % G``; its absolute position is ``prefix_len +
+    chunk_start + r // G``. The causal mask admits key positions <= the
+    query position (shared prefix + already-written suffix); q rows past the
+    valid suffix have position >= total_len and mask out entirely (their
+    output is the defined zero and the engine never reads them).
+    len_ref: [2] = (prefix_len, total_len = prefix_len + suffix_len).
+    """
+    i = pl.program_id(2)
+    n_i = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)                    # [block_q*G, hd]
+    k = k_ref[...].astype(jnp.float32)                    # [page_size, hd]
+    v = v_ref[...].astype(jnp.float32)
+
+    prefix = len_ref[0]
+    total = len_ref[1]
+    page_start = i * page_size
+    # zero value rows at positions never written (stale pages / trash /
+    # interpret-mode padding) before they can meet the accumulators
+    vpos = page_start + jax.lax.broadcasted_iota(
+        jnp.int32, (page_size, 1), 0)
+    v = jnp.where(vpos < total, v, 0.0)
+
+    rows = q.shape[0]
+    qpos = (prefix + pl.program_id(0) * block_q
+            + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // group)
+    kpos = page_start + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, page_size), 1)
+    valid = (kpos <= qpos) & (qpos < total)               # causal + q padding
+    _softmax_accumulate(q, k, v, valid, m_ref, l_ref, acc_ref, scale=scale)
+
+    @pl.when(i == n_i - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def paged_append_attention_pallas(q, k_arena, v_arena, page_table, lens, *,
+                                  block_q: int = 128, interpret: bool = True):
+    """Chunked paged append attention (prefix-cached suffix prefill).
+
+    q [S, H, hd] — S suffix tokens (padded; multiple of 8) whose token i
+    sits at absolute position ``prefix_len + i``; arenas
+    [P, page_size, KV, hd]; page_table [n_pages] int32 physical page ids for
+    ONE request (batch-1 admission path); lens [2] int32 =
+    (prefix_len, total_len). Returns [S, H, hd].
+
+    The grid is (S / block_q, KV, n_pages): each program attends one
+    ``[block_q * G, hd]`` query tile to one physical page, chasing the
+    scalar-prefetched page table over prefix AND suffix pages with the
+    causal mask applied inside the tile — so a request that shares its first
+    ``prefix_len`` tokens reads the prefix KV another request wrote, without
+    ever materializing a contiguous copy. ``block_q`` is clamped to divide S
+    at a multiple of 8.
+    """
+    S, H, hd = q.shape
+    _, page_size, KV, _ = k_arena.shape
+    n_pages = page_table.shape[0]
+    G = H // KV
+    if S % 8:
+        raise ValueError(
+            f"suffix length {S} must be padded to a multiple of 8 "
+            "(VPU/MXU sublane layout)")
+    block_q = min(block_q, S)
+    while S % block_q:
+        block_q -= 8
+    n_qc = S // block_q
+    scale = 1.0 / (hd ** 0.5)
+
+    # [S, H, hd] -> [KV, n_qc, block_q * G, hd]: kv-head-major, rows flatten
+    # (token-in-chunk, group) so row r of a tile is token r // G
+    qg = (q.reshape(S, KV, G, hd).transpose(1, 0, 2, 3)
+          .reshape(KV, n_qc, block_q * G, hd))
+    lens = lens.astype(jnp.int32)
+    page_table = page_table.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_append_attn_kernel,
+                               page_size=page_size, block_q=block_q,
+                               group=G, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                       # the page table
+        grid=(n_qc, KV, n_pages),
+        in_specs=[
+            pl.BlockSpec((2,), lambda c, h, i, pt: (0,)),                  # lens
+            pl.BlockSpec((None, None, block_q * G, hd),
+                         lambda c, h, i, pt: (h, c, 0, 0)),
+            pl.BlockSpec((None, page_size, None, hd),
+                         lambda c, h, i, pt: (pt[i], 0, h, 0)),
+            pl.BlockSpec((None, page_size, None, hd),
+                         lambda c, h, i, pt: (pt[i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q * G, hd),
+                               lambda c, h, i, pt: (h, c, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+            pltpu.VMEM((block_q * G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((KV, n_qc, block_q * G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, lens, qg, k_arena, v_arena)
+    return (out.reshape(KV, n_qc, block_q, G, hd)
+            .transpose(1, 2, 0, 3, 4).reshape(S, H, hd))

@@ -8,12 +8,15 @@ the retrieval_topk note for measurements of that gap).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import (
-    decode_attention_pallas, paged_decode_attention_pallas,
+    decode_attention_pallas, paged_append_attention_pallas,
+    paged_decode_attention_pallas,
 )
 from repro.kernels.decode_attention.ref import (
-    decode_attention_ref, paged_decode_attention_ref,
+    decode_attention_ref, paged_append_attention_ref,
+    paged_decode_attention_ref,
 )
 
 
@@ -44,5 +47,26 @@ def paged_decode_attention(q, k_arena, v_arena, page_table, lengths):
                                       lengths)
 
 
+def paged_append_attention(q, k_arena, v_arena, page_table, prefix_len,
+                           total_len, *, block_q: int = 128):
+    """Chunked paged append attention — the multi-token sibling of
+    :func:`paged_decode_attention`, used by prefix-cached suffix prefill.
+
+    q [S, H, hd] (suffix token i at absolute position ``prefix_len + i``);
+    arenas [P, page_size, KV, hd]; page_table [n_pages] for ONE request;
+    prefix_len / total_len int32 scalars (``total_len`` = prefix + valid
+    suffix; padded q rows beyond it return zeros).
+    """
+    if _on_tpu():
+        lens = jnp.stack([jnp.asarray(prefix_len, jnp.int32),
+                          jnp.asarray(total_len, jnp.int32)])
+        return paged_append_attention_pallas(q, k_arena, v_arena, page_table,
+                                             lens, block_q=block_q,
+                                             interpret=False)
+    return paged_append_attention_ref(q, k_arena, v_arena, page_table,
+                                      prefix_len, total_len)
+
+
 __all__ = ["decode_attention", "decode_attention_ref",
-           "paged_decode_attention", "paged_decode_attention_ref"]
+           "paged_decode_attention", "paged_decode_attention_ref",
+           "paged_append_attention", "paged_append_attention_ref"]

@@ -42,3 +42,36 @@ def paged_decode_attention_ref(q, k_arena, v_arena, page_table, lengths):
     k = k_arena[page_table].reshape(B, n_pages * page_size, KV, hd)
     v = v_arena[page_table].reshape(B, n_pages * page_size, KV, hd)
     return decode_attention_ref(q, k, v, lengths)
+
+
+def paged_append_attention_ref(q, k_arena, v_arena, page_table, prefix_len,
+                               total_len):
+    """Gather-based oracle for chunked suffix prefill against paged KV.
+
+    q [S, H, hd] — suffix token i sits at absolute position
+    ``prefix_len + i``; arenas [P, page_size, KV, hd]; page_table [n_pages]
+    physical page ids for one request; prefix_len/total_len scalars with
+    ``total_len = prefix_len + valid_suffix``. The gather materializes the
+    request's logical [n_pages * page_size, KV, hd] view (prefix pages
+    written by whoever shared them + the suffix this prefill just
+    scattered) and runs causal attention: key position <= query position,
+    both bounded by ``total_len``. Padded q rows (position >= total_len)
+    return zeros.
+    """
+    S, H, hd = q.shape
+    _, page_size, KV, _ = k_arena.shape
+    n_pages = page_table.shape[0]
+    T = n_pages * page_size
+    k = k_arena[page_table].reshape(T, KV, hd).astype(jnp.float32)
+    v = v_arena[page_table].reshape(T, KV, hd).astype(jnp.float32)
+    G = H // KV
+    qg = q.reshape(S, KV, G, hd).astype(jnp.float32)
+    qpos = prefix_len + jnp.arange(S)
+    kpos = jnp.arange(T)
+    valid = (kpos[None, :] <= qpos[:, None]) & (qpos[:, None] < total_len)
+    s = jnp.einsum("skgd,tkd->kgst", qg, k) / np.sqrt(hd)
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[None, None], p, 0.0)
+    out = jnp.einsum("kgst,tkd->skgd", p, v)
+    return out.reshape(S, H, hd).astype(q.dtype)

@@ -7,7 +7,10 @@ latter).
 
 The engine streams any number of prompts through a fixed pool of
 ``--max-batch`` slots backed by a block-granular paged KV-cache (page
-arena + per-slot page tables) wherever the arch supports it. Pass
+arena + per-slot page tables) wherever the arch supports it, with a
+prefix cache on top: prompts sharing a page-aligned prefix (RAG context
+reuse at an edge node) map the same physical pages and only their unique
+suffix is prefilled. Pass ``--no-prefix-cache`` to disable the sharing,
 ``--kv-layout contiguous`` for the worst-case per-slot lanes,
 ``--page-size`` / ``--num-pages`` to shape the page pool, and ``--static``
 to run the blocking static-batch baseline (one padded batch at a time).
@@ -37,6 +40,10 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="page-pool size (default: worst case, "
                          "max_batch * max_seq / page_size)")
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="share KV pages across common prompt prefixes "
+                         "(paged layout only; --no-prefix-cache disables)")
     ap.add_argument("--prompts", nargs="+",
                     default=["What is the capital of France?"])
     args = ap.parse_args()
@@ -46,8 +53,10 @@ def main():
         raise SystemExit("arch vocab too small for byte tokenizer")
     eng = ServingEngine(cfg, max_seq=args.max_seq, max_batch=args.max_batch,
                         kv_layout=args.kv_layout, page_size=args.page_size,
-                        num_pages=args.num_pages)
-    kv = (f"paged KV: {eng.num_pages} x {eng.page_size}-token pages"
+                        num_pages=args.num_pages,
+                        prefix_cache=args.prefix_cache)
+    kv = (f"paged KV: {eng.num_pages} x {eng.page_size}-token pages, "
+          f"prefix cache {'on' if eng.prefix_cache_enabled else 'off'}"
           if eng.kv_layout == "paged" else "contiguous KV lanes")
     print(f"serving {cfg.arch_id} (reduced, {eng.model.n_params():,} params, "
           f"{kv}; random weights — output is noise; the engine is real)")
@@ -63,7 +72,12 @@ def main():
         stats = GenStats(sum(s.prompt_tokens for s in chunks),
                          sum(s.new_tokens for s in chunks),
                          sum(s.prefill_s for s in chunks),
-                         sum(s.decode_s for s in chunks))
+                         sum(s.decode_s for s in chunks),
+                         prefill_traces=sum(s.prefill_traces for s in chunks),
+                         prefix_hits=sum(s.prefix_hits for s in chunks),
+                         prefix_misses=sum(s.prefix_misses for s in chunks),
+                         prefix_tokens_shared=sum(s.prefix_tokens_shared
+                                                  for s in chunks))
     else:
         texts, stats = eng.generate(reqs)
     for p, t in zip(args.prompts, texts):
@@ -72,6 +86,11 @@ def main():
     print(f"[{mode}] prefill {stats.prefill_s*1e3:.0f}ms, "
           f"{stats.new_tokens} tokens at {stats.tokens_per_s:.1f} tok/s; "
           f"traces: {eng.trace_counts}")
+    if eng.kv_layout == "paged" and eng.prefix_cache_enabled:
+        print(f"[prefix-cache] {stats.prefix_hits} hits / "
+              f"{stats.prefix_misses} misses, "
+              f"{stats.prefix_tokens_shared} prompt tokens served from "
+              f"shared pages")
 
 
 if __name__ == "__main__":

@@ -27,8 +27,8 @@ from repro.models.pdefs import (
 )
 from repro.models.shardctx import constrain
 from repro.models.stacks import (
-    Segment, run_segments_decode, run_segments_full, segments_cache_defs,
-    segments_paged_cache_defs, segments_param_defs,
+    Segment, run_segments_append, run_segments_decode, run_segments_full,
+    segments_cache_defs, segments_paged_cache_defs, segments_param_defs,
 )
 
 
@@ -279,6 +279,38 @@ class Model:
     def decode_step(self, params, cache, tokens1, positions):
         """tokens1 [B,1]; positions [B] (position of this token)."""
         return self._decode_step(params, cache, tokens1, positions, None, 0)
+
+    def prefill_paged(self, params, cache, tokens, suffix_len, prefix_len,
+                      page_table, *, page_size: int):
+        """Suffix prefill straight into the page arena (``decode_step_paged``'s
+        multi-token sibling, used by the prefix-cached admission path).
+
+        ``cache`` leaves are page arenas; ``tokens [1, S]`` is the (padded)
+        unique suffix of one request whose first ``prefix_len`` positions are
+        already resident in the pages of ``page_table [n_pages]``;
+        ``suffix_len`` is the number of valid suffix tokens. Each layer
+        scatters the suffix KV at its (physical page, offset) and attends
+        over prefix + suffix, so no intermediate contiguous lane is ever
+        materialized. Returns (last-valid-token logits [1, V], new cache).
+        """
+        assert self.supports_paged_cache, \
+            f"{self.cfg.arch_id}: decoder has non-pageable cache segments"
+        cfg = self.cfg
+        S = tokens.shape[1]
+        x = self._embed(params, tokens)
+        positions = jnp.asarray(prefix_len, jnp.int32) + jnp.arange(S)
+        ctx = self._ctx("append", positions, params=params)
+        ctx["page_table"] = page_table
+        ctx["page_size"] = page_size
+        ctx["prefix_len"] = jnp.asarray(prefix_len, jnp.int32)
+        ctx["suffix_len"] = jnp.asarray(suffix_len, jnp.int32)
+        x, new_cache, _ = run_segments_append(params, x, self.dec_segments,
+                                              ctx, cache)
+        x = F.rms_norm(x, params["final_norm"], cfg.rms_eps)
+        last = jax.lax.dynamic_index_in_dim(
+            x[0], jnp.asarray(suffix_len, jnp.int32) - 1, 0, keepdims=False)
+        logits = self._logits(params, last[None])
+        return logits, new_cache
 
     def decode_step_paged(self, params, cache, tokens1, positions,
                           page_table, *, page_size: int):

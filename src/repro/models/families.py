@@ -12,7 +12,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.kernels.decode_attention.ops import paged_decode_attention
+from repro.kernels.decode_attention.ops import (
+    paged_append_attention, paged_decode_attention,
+)
 from repro.models import mla as mla_mod
 from repro.models import mamba2 as m2
 from repro.models import rwkv6 as rw
@@ -197,11 +199,44 @@ def make_attn_layer(cfg: ModelConfig, *, window: int = 0, ffn: str = "dense",
     # block-granular paged cache: full-context bf16 GQA only — a ring-buffer
     # window already bounds memory, and int8 paging would need scale arenas
     paged_cache_defs = None
+    fwd_append = None
     if not window and not quant:
         def paged_cache_defs(num_pages, page_size):
             return _kv_arena_defs(num_pages, page_size, KV, hd, dt)
 
-    return defs, fwd_full, fwd_decode, cache_defs, paged_cache_defs
+        def fwd_append(p, x, ctx, ce):
+            """Batch-1 suffix prefill against the page arena: token i of x
+            sits at absolute position ``prefix_len + i``. The suffix KV is
+            scattered token-granularly at its (physical page, offset) —
+            pages the slot owns privately, so writes never race a shared
+            prefix page — and attention runs over prefix + suffix through
+            the page table. Rows past ``suffix_len`` scatter to the trash
+            page and mask out of the attention."""
+            ps_sz = ctx["page_size"]
+            pt = ctx["page_table"]                   # [n_pages] (one slot)
+            prefix_len = ctx["prefix_len"]
+            suffix_len = ctx["suffix_len"]
+            pos = ctx["positions"]                   # [S] = prefix + arange
+            S = x.shape[1]
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            q, k, v = qkv(p["attn"], h)              # [1,S,H,hd]
+            q = apply_rope(q, pos[None], theta)
+            k = apply_rope(k, pos[None], theta)
+            packed = _pack(k, v)
+            phys = jnp.where(jnp.arange(S) < suffix_len,
+                             pt[pos // ps_sz], 0)    # padding -> trash page
+            off = pos % ps_sz
+            new_ce = {name: ce[name].at[phys, off].set(
+                          packed[name][0].astype(ce[name].dtype))
+                      for name in packed}
+            a = paged_append_attention(q[0], new_ce["k"], new_ce["v"], pt,
+                                       prefix_len, prefix_len + suffix_len)
+            x = x + out_proj(p["attn"], a[None])
+            x, aux = _ffn_apply(p, x)
+            return x, new_ce, aux
+
+    return defs, fwd_full, fwd_decode, cache_defs, paged_cache_defs, \
+        fwd_append
 
 
 # ---------------------------------------------------------------------------

@@ -26,11 +26,18 @@ from repro.models.pdefs import ParamDef, stack, abstract_from_defs
 @dataclass
 class Segment:
     """Field order matches the family maker tuples:
-    (defs, fwd_full, fwd_decode, cache_defs[, paged_cache_defs]).
+    (defs, fwd_full, fwd_decode, cache_defs[, paged_cache_defs[, fwd_append]]).
 
     ``paged_cache_defs(num_pages, page_size)`` describes the layer's slice
     of a global page arena (no batch axis — slots map into it through a page
-    table); None means the layer only supports contiguous per-slot lanes."""
+    table); None means the layer only supports contiguous per-slot lanes.
+
+    ``fwd_append(p, x, ctx, ce)`` is the multi-token sibling of
+    ``fwd_decode`` for paged caches: x is a batch-1 suffix tile whose token
+    ``i`` sits at absolute position ``ctx["prefix_len"] + i``, ``ce`` is the
+    layer's page arena, and the layer scatters the suffix KV straight into
+    its pages (through ``ctx["page_table"]``) before attending over prefix +
+    suffix. Only paged-capable layers provide it."""
     name: str
     n: int
     defs: Callable[[], Any]
@@ -38,6 +45,7 @@ class Segment:
     fwd_decode: Callable
     cache_defs: Callable[[int, int], Any]
     paged_cache_defs: Optional[Callable[[int, int], Any]] = None
+    fwd_append: Optional[Callable] = None
     scan: bool = True
 
 
@@ -110,6 +118,35 @@ def run_segments_full(params, x, segments: List[Segment], ctx,
     return x, cache_out, aux_total
 
 
+def run_segments_append(params, x, segments: List[Segment], ctx, cache):
+    """Multi-token suffix step against an existing paged cache: like
+    :func:`run_segments_decode` but x is a [1, S] suffix tile and each layer
+    writes S new cache positions (prefix-cached partial prefill)."""
+    new_cache = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for s in segments:
+        if s.fwd_append is None:
+            raise NotImplementedError(
+                f"segment {s.name!r} has no paged append path")
+        p = params[s.name]
+        ce = cache.get(s.name)
+        if s.scan and s.n > 1:
+            def body(h, args, _s=s):
+                pl, ce_l = args
+                h2, ce2, aux = _s.fwd_append(pl, h, ctx, ce_l)
+                return h2, (ce2, aux)
+            x, (ces, auxs) = jax.lax.scan(body, x, (p, ce))
+            if ces:
+                new_cache[s.name] = ces
+            aux_total += jnp.sum(auxs)
+        else:
+            x, ce2, aux = s.fwd_append(p, x, ctx, ce)
+            if ce2:
+                new_cache[s.name] = ce2
+            aux_total += aux
+    return x, new_cache, aux_total
+
+
 def run_segments_decode(params, x1, segments: List[Segment], ctx, cache):
     """Single-token step through all segments, updating the cache."""
     new_cache = {}
@@ -137,4 +174,5 @@ def run_segments_decode(params, x1, segments: List[Segment], ctx, cache):
 __all__ = [
     "Segment", "segments_param_defs", "segments_cache_defs",
     "segments_paged_cache_defs", "run_segments_full", "run_segments_decode",
+    "run_segments_append",
 ]

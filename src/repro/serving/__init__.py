@@ -1,9 +1,11 @@
 from repro.serving.engine import (
     EngineCompletion, GenStats, Request, ServingEngine, make_edge_engine,
 )
-from repro.serving.paging import PageAllocator, pages_needed
+from repro.serving.paging import (
+    PageAllocator, PagingError, PrefixCache, pages_needed,
+)
 from repro.serving.scheduler import Completion, TierScheduler
 
 __all__ = ["ServingEngine", "Request", "GenStats", "EngineCompletion",
            "make_edge_engine", "TierScheduler", "Completion",
-           "PageAllocator", "pages_needed"]
+           "PageAllocator", "PrefixCache", "PagingError", "pages_needed"]

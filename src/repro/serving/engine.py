@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine with a block-granular paged KV-cache.
+"""Continuous-batching serving engine with a prefix-cached paged KV-cache.
 
 This is the engine that runs at edge nodes (reduced SLM) and — in pod
 deployment — behind the cloud tier. Requests stream through a fixed pool of
@@ -12,16 +12,47 @@ deployment — behind the cloud tier. Requests stream through a fixed pool of
   ``max_seq`` lane and the number of *resident* requests is bounded by
   actual token demand, not by ``max_batch x max_seq`` worst-case memory.
   Physical page 0 is the trash page: table entries past a slot's allocation
-  point at it, keeping every scatter/gather fixed-shape. Invariants:
+  point at it, keeping every scatter/gather fixed-shape.
 
-  - the :class:`~repro.serving.paging.PageAllocator` (host numpy free-list)
-    hands each active slot *distinct* pages — device scatters never race;
-  - pages are reserved for prompt + full decode budget at admission, so a
-    resident request can always run to completion (no mid-decode eviction);
-  - page tables ride into the jitted decode as a fixed-shape ``[max_batch,
-    pages_per_slot]`` int32 argument — remapping slots never re-traces;
-  - completed slots return their pages to the free list before the next
-    admission round.
+  On top of the arena sits a **prefix cache** (on by default,
+  ``prefix_cache=False`` to disable) — the EACO-RAG edge tier answers many
+  queries grounded in the same retrieved context, so requests sharing a
+  prompt prefix should share its KV instead of recomputing it:
+
+  - *hash chains*: prompts are cut into page-sized token blocks and indexed
+    by chain hash (parent hash + block tokens, token-verified on lookup) in
+    :class:`~repro.serving.paging.PrefixCache`. ``admit`` walks the chain
+    for the longest page-aligned shared prefix and maps those physical
+    pages into the new slot's page table read-only.
+  - *CoW tail*: the partially-filled last prompt page of a cached prompt is
+    indexed too; when its leading tokens agree with the new request, the
+    page is copied on-device (copy-on-write — the new slot will keep
+    writing into that logical page) so even a non-page-aligned retrieval
+    context is shared up to its last token. The match is always capped at
+    ``prompt_len - 1`` so at least one suffix token remains to produce
+    first-token logits.
+  - *refcount lifecycle*: shared pages carry one reference per mapping slot
+    (:meth:`PageAllocator.ref`); retirement decrements and only
+    decrement-to-zero releases a page. Pages the index still values park in
+    an LRU pool — KV bytes stay valid for future hits — and are reclaimed
+    (oldest first) only when the allocator actually needs the capacity, so
+    cached prefixes cost nothing under low pressure and nothing *extra*
+    under high pressure.
+  - *suffix-only prefill*: after the match, only the unique suffix runs
+    through the model (``Model.prefill_paged`` -> per-layer ``fwd_append``
+    -> the chunked paged append-attention kernel), scattering its KV
+    straight into freshly allocated pages — there is no intermediate
+    contiguous lane and no lane->arena copy anywhere in the paged path.
+
+  Remaining invariants from the plain paged design: the allocator hands
+  each slot's *private* pages to exactly one slot (shared pages are only
+  ever read after their writer finishes with them — block pages are
+  write-once at prefill, CoW sources are copied, and decode always writes
+  at positions >= prompt_len, which land in private pages); pages are
+  reserved for prompt + full decode budget at admission, so a resident
+  request always runs to completion; page tables ride into the jitted
+  decode as fixed-shape ``[max_batch, pages_per_slot]`` int32 arguments —
+  remapping or sharing slots never re-traces.
 
 * ``contiguous`` — the PR-1 layout, one persistent ``[max_batch, max_seq,
   ...]`` lane per slot. Kept as the numerical/throughput baseline (see
@@ -30,17 +61,18 @@ deployment — behind the cloud tier. Requests stream through a fixed pool of
   RWKV state, cross-attention memories).
 
 Admission via :meth:`admit` requires :meth:`can_admit` — a free slot AND, in
-paged mode, enough free pages for the request's prompt + budget. Prefill is
-per-slot (batch-1, chunk-padded) and its cache is scattered into freshly
-allocated pages (or the slot's lane) by a single fixed-shape insert;
-``step()`` runs ONE fused decode for all slots at ``[max_batch, 1]``.
+paged mode, enough allocatable pages (free + LRU-evictable) for the
+request's *unshared* pages. ``step()`` runs ONE fused decode for all slots
+at ``[max_batch, 1]``.
 
-All jitted functions run at fixed shapes — decode, sampling and insert
-compile exactly once per engine config; prefill compiles once per
-``q_chunk`` bucket. ``trace_counts`` exposes per-function trace counters so
-tests and benchmarks can assert compile stability. Decode budgets stay
-per-slot: each request may emit up to ``min(max_new_tokens, max_seq -
-prompt_len)`` tokens.
+All jitted functions run at fixed shapes — decode, sampling, page-copy and
+(contiguous) insert compile exactly once per engine config; prefill
+compiles once per power-of-two pad bucket (heavy-tailed prompt mixes
+therefore retrace at most ``log2(max_seq)`` times, and :meth:`warmup`
+precompiles every bucket up front). ``trace_counts`` exposes per-function
+trace counters so tests and benchmarks can assert compile stability.
+Decode budgets stay per-slot: each request may emit up to
+``min(max_new_tokens, max_seq - prompt_len)`` tokens.
 """
 from __future__ import annotations
 
@@ -56,7 +88,9 @@ from repro.configs.base import ModelConfig
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.api import Model, build_model
 from repro.models.pdefs import is_pdef
-from repro.serving.paging import TRASH_PAGE, PageAllocator, pages_needed
+from repro.serving.paging import (
+    TRASH_PAGE, PageAllocator, PrefixCache, pages_needed,
+)
 
 
 @dataclass
@@ -65,10 +99,19 @@ class GenStats:
     new_tokens: int
     prefill_s: float
     decode_s: float
+    prefill_traces: int = 0        # _prefill traces during this generate
+    prefix_hits: int = 0           # admissions that shared >= 1 prefix token
+    prefix_misses: int = 0         # paged admissions with nothing shared
+    prefix_tokens_shared: int = 0  # prompt tokens served from cached pages
 
     @property
     def tokens_per_s(self) -> float:
         return self.new_tokens / self.decode_s if self.decode_s > 0 else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        n = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / n if n else 0.0
 
 
 @dataclass
@@ -98,8 +141,26 @@ class _Slot:
     prompt_tokens: int
     pending: int                 # sampled, not yet emitted/fed token
     admitted_at: float
-    page_ids: Optional[np.ndarray] = None   # physical pages owned (paged)
+    page_ids: Optional[np.ndarray] = None   # pages referenced (shared+own)
     out_ids: List[int] = field(default_factory=list)
+
+
+@dataclass
+class _Plan:
+    """Host-side admission plan (memoized per request + page-state
+    generation: matches go stale whenever pages move)."""
+    enc: List[int]
+    budget: int
+    total_pages: int = 0
+    shared_ids: List[int] = field(default_factory=list)   # full-block pages
+    tail: Optional[Tuple[int, int]] = None   # (CoW source page, tokens)
+    need_fresh: int = 0
+
+    @property
+    def reuse_ids(self) -> List[int]:
+        """Pages the admission reads from the cache: shared full-block maps
+        plus the CoW source — all must be protected from eviction."""
+        return self.shared_ids + ([self.tail[0]] if self.tail else [])
 
 
 def _tmap(f, *trees):
@@ -112,7 +173,7 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, max_seq: int = 512,
                  max_batch: int = 8, seed: int = 0, params=None,
                  kv_layout: str = "auto", page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, prefix_cache: bool = True):
         self.cfg = cfg
         self.max_seq = max_seq
         self.max_batch = max_batch
@@ -133,7 +194,6 @@ class ServingEngine:
                 "(window/int8/SSM/cross state); use kv_layout='contiguous'")
         self.kv_layout = kv_layout
 
-        lane_defs = self.model.cache_defs(1)     # batch-1 prefill lane
         if kv_layout == "paged":
             assert page_size % 8 == 0, "page_size must keep the 8-row layout"
             assert max_seq % page_size == 0, (max_seq, page_size)
@@ -149,9 +209,10 @@ class ServingEngine:
             self._cache = _tmap(lambda d: jnp.zeros(d.shape, d.dtype),
                                 arena_defs)
             self._page_ax = _tmap(lambda d: d.axes.index("pages"), arena_defs)
-            self._pseq_ax = _tmap(lambda d: d.axes.index("page_seq"),
-                                  arena_defs)
             self._allocator = PageAllocator(self.num_pages)
+            self._prefix = PrefixCache(page_size) if prefix_cache else None
+            if self._prefix is not None:
+                self._allocator.evict_cb = self._prefix.forget
             self._page_tables = np.full(
                 (max_batch, self.pages_per_slot), TRASH_PAGE, np.int32)
         else:
@@ -159,16 +220,13 @@ class ServingEngine:
             self.pages_per_slot = None
             self.num_pages = None
             self._allocator = None
+            self._prefix = None
             self._page_tables = None
             # ---- persistent KV-cache pool: one lane per slot --------------
             pool_defs = self.model.cache_defs(max_batch)
             self._batch_ax = _tmap(lambda d: d.axes.index("batch"), pool_defs)
             self._cache = _tmap(lambda d: jnp.zeros(d.shape, d.dtype),
                                 pool_defs)
-        self._lane_b_ax = _tmap(lambda d: d.axes.index("batch"), lane_defs)
-        self._lane_s_ax = _tmap(
-            lambda d: d.axes.index("cache_seq") if "cache_seq" in d.axes
-            else -1, lane_defs)
 
         # ---- host-side slot state -----------------------------------------
         self._slots: List[Optional[_Slot]] = [None] * max_batch
@@ -176,21 +234,32 @@ class ServingEngine:
         self._positions = np.zeros(max_batch, np.int32)
         self._temps = np.zeros(max_batch, np.float32)
         self._next_req_id = 0
-        self._plan_cache = None   # one-entry (request, plan) memo
+        self._plan_cache = None   # one-entry (request, generation, plan) memo
         self.peak_active = 0      # high-water mark of resident requests
         self.prefill_s = 0.0      # cumulative engine-lifetime timers
         self.decode_s = 0.0
+        self.prefix_hits = 0      # engine-lifetime prefix-cache counters
+        self.prefix_misses = 0
+        self.prefix_tokens_shared = 0
 
         # ---- fixed-shape jitted functions with trace instrumentation ------
         # the counters increment only when JAX (re)traces a function, so a
-        # stable engine shows exactly one decode/sample/insert trace no
-        # matter how many streams of differing batch mix it serves.
+        # stable engine shows exactly one decode/sample/insert/copy trace no
+        # matter how many streams of differing batch mix it serves; prefill
+        # traces once per power-of-two pad bucket.
         self.trace_counts: Dict[str, int] = {
-            "prefill": 0, "decode": 0, "sample": 0, "insert": 0}
+            "prefill": 0, "decode": 0, "sample": 0, "insert": 0, "copy": 0}
 
         def _prefill_fn(params, tokens, lengths):
             self.trace_counts["prefill"] += 1
             return self.model.prefill(params, tokens, None, lengths)
+
+        def _prefill_paged_fn(params, cache, tokens, suffix_len, prefix_len,
+                              page_row):
+            self.trace_counts["prefill"] += 1
+            return self.model.prefill_paged(
+                params, cache, tokens, suffix_len, prefix_len, page_row,
+                page_size=self.page_size)
 
         def _decode_fn(params, cache, tokens1, positions):
             self.trace_counts["decode"] += 1
@@ -221,40 +290,35 @@ class ServingEngine:
 
             return jax.tree_util.tree_map(put, pool, one, self._batch_ax)
 
-        def _insert_paged_fn(arena, lane, page_row):
-            """Chop the batch-1 prefill lane into page_size chunks and
-            scatter them at the slot's physical page ids. ``page_row`` is
-            always the full ``[pages_per_slot]`` row (fixed shape); entries
-            past the allocation are TRASH_PAGE, so the surplus lane chunks
-            land in trash."""
-            self.trace_counts["insert"] += 1
-            ps = self.page_size
+        def _copy_page_fn(arena, src, dst):
+            """Device copy of one physical page across every layer's arena —
+            the copy-on-write step for a matched partial tail page."""
+            self.trace_counts["copy"] += 1
 
-            def put(big, small, p_ax, s_ax, b_ax, q_ax):
-                sm = jnp.moveaxis(small, b_ax, 0)[0]          # drop batch
-                sq = q_ax - 1 if b_ax < q_ax else q_ax
-                sm = jnp.moveaxis(sm, sq, 0)                  # [S, rest...]
-                sm = sm.reshape((sm.shape[0] // ps, ps) + sm.shape[1:])
-                bg = jnp.moveaxis(big, (p_ax, s_ax), (0, 1))
-                bg = bg.at[page_row].set(sm.astype(bg.dtype))
-                return jnp.moveaxis(bg, (0, 1), (p_ax, s_ax))
+            def cp(big, ax):
+                big_m = jnp.moveaxis(big, ax, 0)
+                row = jax.lax.dynamic_index_in_dim(big_m, src, 0,
+                                                   keepdims=False)
+                big_m = jax.lax.dynamic_update_index_in_dim(
+                    big_m, row, dst, 0)
+                return jnp.moveaxis(big_m, 0, ax)
 
-            return jax.tree_util.tree_map(
-                put, arena, lane, self._page_ax, self._pseq_ax,
-                self._lane_b_ax, self._lane_s_ax)
+            return jax.tree_util.tree_map(cp, arena, self._page_ax)
 
-        # donate the cache pool/arena through decode/insert so XLA updates
-        # it in place instead of copying the whole pool per token (CPU
-        # doesn't implement donation and would warn)
+        # donate the cache pool/arena through decode/insert/prefill so XLA
+        # updates it in place instead of copying the whole pool per call
+        # (CPU doesn't implement donation and would warn)
         donate = jax.default_backend() != "cpu"
-        self._prefill = jax.jit(_prefill_fn)
         self._sample = jax.jit(_sample_fn)
         if kv_layout == "paged":
+            self._prefill_paged = jax.jit(
+                _prefill_paged_fn, donate_argnums=(1,) if donate else ())
+            self._copy_page = jax.jit(
+                _copy_page_fn, donate_argnums=(0,) if donate else ())
             self._decode = jax.jit(_decode_paged_fn,
                                    donate_argnums=(1,) if donate else ())
-            self._insert = jax.jit(_insert_paged_fn,
-                                   donate_argnums=(0,) if donate else ())
         else:
+            self._prefill = jax.jit(_prefill_fn)
             self._decode = jax.jit(_decode_fn,
                                    donate_argnums=(1,) if donate else ())
             self._insert = jax.jit(_insert_fn,
@@ -284,6 +348,16 @@ class ServingEngine:
         return self._allocator.free_pages if self._allocator else None
 
     @property
+    def cached_pages(self) -> Optional[int]:
+        """Refcount-0 pages retained by the prefix cache (reclaimable)."""
+        return self._allocator.cached_pages if self._allocator else None
+
+    @property
+    def available_pages(self) -> Optional[int]:
+        """Pages an admission could obtain (free + LRU-evictable)."""
+        return self._allocator.available_pages if self._allocator else None
+
+    @property
     def kv_cache_tokens(self) -> int:
         """Token capacity of the KV memory (paged: usable pages; contiguous:
         the full slot pool)."""
@@ -296,61 +370,138 @@ class ServingEngine:
         return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(
             self._cache)))
 
+    @property
+    def prefix_cache_enabled(self) -> bool:
+        return self._prefix is not None
+
+    @property
+    def pad_buckets(self) -> List[int]:
+        """Every prefill pad bucket this engine can compile (8, 16, ...,
+        ``max_seq``) — the bound on lifetime prefill traces; also what
+        :meth:`warmup` iterates."""
+        out, b = [], self._pad_bucket(1)
+        while b < self.max_seq:
+            out.append(b)
+            b = self._pad_bucket(b + 1)
+        out.append(self._pad_bucket(self.max_seq))
+        return out
+
     # ------------------------------------------------------------------
     # Continuous-batching API: can_admit / admit / step
     # ------------------------------------------------------------------
-    def _plan(self, request: Request) -> Tuple[List[int], int, int]:
-        """(encoded prompt, decode budget, pages needed). Memoized for the
-        last request seen: a queue head blocked on pages is re-planned by
-        ``can_admit`` every decode step, and ``admit`` re-plans right after
-        the ``can_admit`` that green-lit it."""
+    def _pad_bucket(self, n: int) -> int:
+        """Prefill pad length for ``n`` tokens: next power of two (>= 8,
+        capped at ``max_seq``). Heavy-tailed workloads therefore retrace
+        prefill at most ``log2(max_seq)`` times instead of once per
+        ``q_chunk`` multiple; :meth:`warmup` precompiles every bucket."""
+        p = max(8, 1 << (max(n, 1) - 1).bit_length())
+        qc = max(self.cfg.q_chunk, 1)
+        if p > qc and p % qc:
+            p = -(-p // qc) * qc          # blockwise prefill needs qc chunks
+        return min(p, self.max_seq)
+
+    def _plan(self, request: Request) -> _Plan:
+        """Admission plan: encoded prompt, decode budget and — in paged
+        mode — the prefix-cache match (shared full-block pages + CoW tail)
+        and the fresh-page demand it leaves. Memoized for the last request
+        seen at the current page-state generation: a queue head blocked on
+        pages is re-planned by ``can_admit`` every decode step, and
+        ``admit`` re-plans right after the ``can_admit`` that green-lit it
+        — but any alloc/free/evict in between invalidates the match."""
+        gen = self._allocator.generation if self._allocator else 0
         cached = self._plan_cache
-        if cached is not None and cached[0] is request:
-            return cached[1]
+        if cached is not None and cached[0] is request and cached[1] == gen:
+            return cached[2]
         enc = self.tok.encode(request.prompt)[: self.max_seq - 1]
         L = len(enc)
         budget = max(0, min(request.max_new_tokens, self.max_seq - L))
-        need = (pages_needed(L + budget, self.page_size)
-                if self.kv_layout == "paged" else 0)
-        self._plan_cache = (request, (enc, budget, need))
-        return enc, budget, need
+        plan = _Plan(enc, budget)
+        if self.kv_layout == "paged":
+            plan.total_pages = pages_needed(L + budget, self.page_size)
+            if self._prefix is not None:
+                # cap the match at L-1 tokens: at least one suffix token
+                # must remain to prefill for first-token logits
+                plan.shared_ids, plan.tail = self._prefix.match(enc[:L - 1])
+            plan.need_fresh = plan.total_pages - len(plan.shared_ids)
+        self._plan_cache = (request, gen, plan)
+        return plan
 
     def can_admit(self, request: Request) -> bool:
-        """A free slot AND (paged) enough free pages for prompt + budget.
-        Because pages are reserved through a request's whole budget, an
-        engine draining its residents always becomes admissible again."""
+        """A free slot AND (paged) enough allocatable pages for the
+        request's unshared demand. Because pages are reserved through a
+        request's whole budget, an engine draining its residents always
+        becomes admissible again."""
         if self.free_slots == 0:
             return False
         if self.kv_layout != "paged":
             return True
-        _, _, need = self._plan(request)
-        return need <= self._allocator.free_pages
+        plan = self._plan(request)
+        return self._allocator.can_reserve(plan.need_fresh, plan.reuse_ids)
 
     def admit(self, request: Request) -> int:
-        """Prefill one request into a free slot (paged: into freshly
-        allocated pages). Returns the engine-local request id used in
-        :class:`EngineCompletion`. Callers gate on :meth:`can_admit`."""
+        """Prefill one request into a free slot. In paged mode this is the
+        prefix-cache hot path: map matched shared pages, CoW-copy a matched
+        partial tail page, then prefill ONLY the unique suffix straight
+        into freshly allocated pages. Returns the engine-local request id
+        used in :class:`EngineCompletion`. Callers gate on
+        :meth:`can_admit`."""
         slot = next((i for i, s in enumerate(self._slots) if s is None), None)
         if slot is None:
             raise RuntimeError("no free slot; check can_admit before admit")
-        enc, budget, need = self._plan(request)
+        plan = self._plan(request)
+        enc, budget = plan.enc, plan.budget
         L = len(enc)
-        page_ids = None
-        if self.kv_layout == "paged":
-            page_ids = self._allocator.alloc(need)     # raises if exhausted
-            row = np.full(self.pages_per_slot, TRASH_PAGE, np.int32)
-            row[:need] = page_ids
-        qc = max(self.cfg.q_chunk, 1)
-        pad_len = min(-(-L // qc) * qc, self.max_seq)
-        tokens, lengths = self.tok.pad_batch([enc], pad_len)
 
         t0 = time.perf_counter()
-        logits, lane = self._prefill(self.params, jnp.asarray(tokens),
-                                     jnp.asarray(lengths))
         if self.kv_layout == "paged":
-            self._cache = self._insert(self._cache, lane, jnp.asarray(row))
+            ps = self.page_size
+            # protect every reused page (shared maps AND the CoW source)
+            # from the eviction that alloc may trigger
+            self._allocator.ref(plan.reuse_ids)
+            try:
+                fresh = self._allocator.alloc(plan.need_fresh)
+            except Exception:
+                # callers that skipped can_admit must not leak references
+                self._allocator.free(
+                    plan.reuse_ids,
+                    retain=self._prefix.owns if self._prefix else None)
+                raise
+            n_shared = len(plan.shared_ids)
+            row = np.full(self.pages_per_slot, TRASH_PAGE, np.int32)
+            row[:n_shared] = plan.shared_ids
+            row[n_shared:plan.total_pages] = fresh
+            prefix_len = n_shared * ps
+            if plan.tail is not None:
+                src, t_match = plan.tail
+                self._cache = self._copy_page(
+                    self._cache, jnp.int32(src), jnp.int32(int(row[n_shared])))
+                prefix_len += t_match
+                # drop the temporary protection ref on the CoW source (its
+                # contents now live in the slot's private copy)
+                self._allocator.free(
+                    [src], retain=self._prefix.owns if self._prefix else None)
+            suffix = enc[prefix_len:]
+            pad_len = self._pad_bucket(len(suffix))
+            tokens, _ = self.tok.pad_batch([suffix], pad_len)
+            logits, self._cache = self._prefill_paged(
+                self.params, self._cache, jnp.asarray(tokens),
+                jnp.int32(len(suffix)), jnp.int32(prefix_len),
+                jnp.asarray(row))
             self._page_tables[slot] = row
+            page_ids = row[:plan.total_pages].copy()
+            if self._prefix is not None:
+                self._prefix.insert(enc, row)
+                if prefix_len:
+                    self.prefix_hits += 1
+                else:
+                    self.prefix_misses += 1
+                self.prefix_tokens_shared += prefix_len
         else:
+            page_ids = None
+            pad_len = self._pad_bucket(L)
+            tokens, lengths = self.tok.pad_batch([enc], pad_len)
+            logits, lane = self._prefill(self.params, jnp.asarray(tokens),
+                                         jnp.asarray(lengths))
             self._cache = self._insert(self._cache, lane, np.int32(slot))
         self._key, sub = jax.random.split(self._key)
         first = self._sample(logits,
@@ -372,8 +523,8 @@ class ServingEngine:
 
     def step(self) -> List[EngineCompletion]:
         """One pump of the pool: harvest pending tokens (retiring finished
-        sequences, freeing their slot and pages), then run ONE fixed-shape
-        decode for whatever remains active."""
+        sequences, freeing their slot and page references), then run ONE
+        fixed-shape decode for whatever remains active."""
         done: List[EngineCompletion] = []
         now = time.perf_counter()
         for i, s in enumerate(self._slots):
@@ -414,7 +565,11 @@ class ServingEngine:
     def _free(self, slot: int) -> None:
         s = self._slots[slot]
         if s is not None and s.page_ids is not None:
-            self._allocator.free(s.page_ids)
+            # drop one reference per page; decrement-to-zero pages the
+            # prefix index values are retained (LRU) instead of freed
+            self._allocator.free(
+                s.page_ids,
+                retain=self._prefix.owns if self._prefix else None)
             self._page_tables[slot] = TRASH_PAGE
         self._slots[slot] = None
         self._tokens[slot] = self.tok.pad_id
@@ -445,6 +600,9 @@ class ServingEngine:
                   ) -> Tuple[List[str], GenStats]:
         assert not self.has_active, "engine already has resident requests"
         p0, d0 = self.prefill_s, self.decode_s
+        t0 = self.trace_counts["prefill"]
+        h0, m0, s0 = (self.prefix_hits, self.prefix_misses,
+                      self.prefix_tokens_shared)
         queue = list(requests)
         rid_to_idx: Dict[int, int] = {}
         comps: Dict[int, EngineCompletion] = {}
@@ -462,35 +620,47 @@ class ServingEngine:
         stats = GenStats(
             prompt_tokens=sum(c.prompt_tokens for c in ordered),
             new_tokens=sum(c.new_tokens for c in ordered),
-            prefill_s=self.prefill_s - p0, decode_s=self.decode_s - d0)
+            prefill_s=self.prefill_s - p0, decode_s=self.decode_s - d0,
+            prefill_traces=self.trace_counts["prefill"] - t0,
+            prefix_hits=self.prefix_hits - h0,
+            prefix_misses=self.prefix_misses - m0,
+            prefix_tokens_shared=self.prefix_tokens_shared - s0)
         return [c.text for c in ordered], stats
 
     # ------------------------------------------------------------------
     def warmup(self, prompt_lens: Iterable[int] = (1,)) -> None:
-        """Pre-compile every fixed-shape function (decode, sample, insert)
-        and the prefill bucket for each given prompt length, leaving the
-        pool idle. Lets benchmarks separate compile from serve time."""
+        """Pre-compile every fixed-shape function (decode, sample, page
+        copy / insert) and EVERY power-of-two prefill bucket up to the
+        largest implied by ``prompt_lens``, leaving the pool idle. Smaller
+        buckets are compiled too because prefix-cache hits shrink the
+        prefilled suffix below the prompt length. Lets benchmarks separate
+        compile from serve time."""
         assert not self.has_active
-        qc = max(self.cfg.q_chunk, 1)
-        buckets = sorted({min(-(-max(n, 1) // qc) * qc, self.max_seq)
-                          for n in prompt_lens})
+        cap = max((self._pad_bucket(max(n, 1)) for n in prompt_lens),
+                  default=8)
+        buckets = [b for b in self.pad_buckets if b <= cap]
         key = jax.random.PRNGKey(0)
         paged = self.kv_layout == "paged"
         # rebind the pool at every call: the cache argument is donated, so
-        # the old buffer is dead after each decode/insert (pool is idle —
-        # a paged warmup scribbles only on the trash page, a contiguous one
-        # on lane 0, which is rewritten on admission)
+        # the old buffer is dead after each decode/prefill/copy (pool is
+        # idle — a paged warmup scribbles only on the trash page, a
+        # contiguous one on lane 0, which is rewritten on admission)
         for pad_len in buckets:
             toks = jnp.zeros((1, pad_len), jnp.int32)
-            logits, lane = self._prefill(self.params, toks,
-                                         jnp.asarray([pad_len], jnp.int32))
             if paged:
                 trash_row = jnp.full((self.pages_per_slot,), TRASH_PAGE,
                                      jnp.int32)
-                self._cache = self._insert(self._cache, lane, trash_row)
+                logits, self._cache = self._prefill_paged(
+                    self.params, self._cache, toks, jnp.int32(1),
+                    jnp.int32(0), trash_row)
             else:
+                logits, lane = self._prefill(
+                    self.params, toks, jnp.asarray([pad_len], jnp.int32))
                 self._cache = self._insert(self._cache, lane, np.int32(0))
             self._sample(logits, jnp.asarray([0.0], jnp.float32), key)
+        if paged:
+            self._cache = self._copy_page(self._cache, jnp.int32(TRASH_PAGE),
+                                          jnp.int32(TRASH_PAGE))
         args = (self.params, self._cache,
                 jnp.asarray(self._tokens)[:, None],
                 jnp.asarray(self._positions))
@@ -504,7 +674,8 @@ class ServingEngine:
 def make_edge_engine(*, max_seq: int = 512, max_batch: int = 8,
                      seed: int = 0, **kw) -> ServingEngine:
     """Default edge SLM: reduced qwen2-0.5b (byte vocab capable). Extra
-    keyword args (kv_layout, page_size, num_pages, ...) pass through."""
+    keyword args (kv_layout, page_size, num_pages, prefix_cache, ...) pass
+    through."""
     from repro.configs import get_config
     cfg = get_config("qwen2-0.5b", reduced=True)
     return ServingEngine(cfg, max_seq=max_seq, max_batch=max_batch, seed=seed,

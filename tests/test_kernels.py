@@ -7,10 +7,12 @@ import pytest
 
 from repro.kernels.decode_attention import ops as da_ops
 from repro.kernels.decode_attention.kernel import (
-    decode_attention_pallas, paged_decode_attention_pallas,
+    decode_attention_pallas, paged_append_attention_pallas,
+    paged_decode_attention_pallas,
 )
 from repro.kernels.decode_attention.ref import (
-    decode_attention_ref, paged_decode_attention_ref,
+    decode_attention_ref, paged_append_attention_ref,
+    paged_decode_attention_ref,
 )
 from repro.kernels.retrieval_topk.kernel import retrieval_topk_pallas
 from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
@@ -171,6 +173,100 @@ def test_paged_trash_page_contents_never_leak():
     k2 = k2.at[pt[0, 3], ps - 9:].set(777.0)
     v2 = v2.at[pt[0, 3], ps - 9:].set(-777.0)
     out2 = paged_decode_attention_pallas(q, k2, v2, pt, lengths)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Paged append attention (chunked suffix prefill)
+# ---------------------------------------------------------------------------
+
+def _append_case(P, ps, KV, hd, n_pages, seed=0):
+    rng = np.random.default_rng(seed)
+    k_arena = jnp.asarray(rng.normal(size=(P, ps, KV, hd)).astype(np.float32))
+    v_arena = jnp.asarray(rng.normal(size=(P, ps, KV, hd)).astype(np.float32))
+    pt = np.zeros(n_pages, np.int32)
+    perm = rng.permutation(np.arange(1, P))
+    pt[:] = perm[:n_pages]
+    return k_arena, v_arena, jnp.asarray(pt)
+
+
+@pytest.mark.parametrize("H,KV,hd,ps,S,prefix,suffix,block_q", [
+    (8, 2, 64, 16, 64, 21, 33, 16),     # ragged prefix/suffix, small chunks
+    (14, 2, 64, 16, 96, 0, 96, 128),    # full prefill (no prefix), clamp bq
+    (8, 4, 128, 8, 32, 40, 7, 32),      # long prefix, tiny suffix + padding
+    (4, 4, 64, 32, 40, 32, 40, 128),    # MHA, page-aligned prefix, bq->40
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_append_matches_ref(H, KV, hd, ps, S, prefix, suffix, block_q,
+                                  dtype):
+    P = 24
+    n_pages = -(-(prefix + suffix) // ps) + 1
+    k_arena, v_arena, pt = _append_case(P, ps, KV, hd, n_pages)
+    k_arena = k_arena.astype(dtype)
+    v_arena = v_arena.astype(dtype)
+    q = jax.random.normal(jax.random.PRNGKey(1), (S, H, hd), dtype)
+    lens = jnp.asarray([prefix, prefix + suffix], jnp.int32)
+    out = paged_append_attention_pallas(q, k_arena, v_arena, pt, lens,
+                                        block_q=block_q)
+    ref = paged_append_attention_ref(q, k_arena, v_arena, pt,
+                                     jnp.int32(prefix),
+                                     jnp.int32(prefix + suffix))
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+    # padded q rows (beyond the valid suffix) are defined zeros
+    if suffix < S:
+        assert (np.asarray(out, np.float32)[suffix:] == 0).all()
+
+
+def test_paged_append_rejects_unpadded_suffix():
+    """S not a multiple of 8 violates the sublane-layout contract and must
+    raise a clear error, not derail the block_q clamp."""
+    k_arena, v_arena, pt = _append_case(8, 16, 2, 64, 2)
+    q = jax.random.normal(jax.random.PRNGKey(0), (20, 4, 64))
+    with pytest.raises(ValueError, match="multiple of 8"):
+        paged_append_attention_pallas(q, k_arena, v_arena, pt,
+                                      jnp.asarray([0, 20], jnp.int32))
+
+
+def test_paged_append_last_row_equals_decode():
+    """The append kernel's last valid row must equal the decode kernel run
+    on that single token — they are the same attention at chunk size 1."""
+    H, KV, hd, ps = 8, 2, 64, 16
+    prefix, suffix = 19, 24
+    n_pages = -(-(prefix + suffix) // ps)
+    k_arena, v_arena, pt = _append_case(32, ps, KV, hd, n_pages, seed=5)
+    q = jax.random.normal(jax.random.PRNGKey(2), (suffix, H, hd))
+    lens = jnp.asarray([prefix, prefix + suffix], jnp.int32)
+    out = paged_append_attention_pallas(q, k_arena, v_arena, pt, lens,
+                                        block_q=8)
+    dec = paged_decode_attention_pallas(
+        q[suffix - 1][None], k_arena, v_arena, pt[None],
+        jnp.asarray([prefix + suffix], jnp.int32))
+    np.testing.assert_allclose(np.asarray(out)[suffix - 1], np.asarray(dec)[0],
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_append_causal_and_stale_page_masking():
+    """Keys at positions > the query's (later suffix tokens) and stale data
+    beyond total_len — including the trash page — must not leak in."""
+    H, KV, hd, ps = 4, 2, 64, 16
+    prefix, suffix = 16, 9
+    n_pages = 3
+    k_arena, v_arena, pt = _append_case(16, ps, KV, hd, n_pages, seed=7)
+    q = jax.random.normal(jax.random.PRNGKey(3), (16, H, hd))
+    lens = jnp.asarray([prefix, prefix + suffix], jnp.int32)
+    out1 = paged_append_attention_pallas(q, k_arena, v_arena, pt, lens)
+    # poison everything at/after total_len plus the whole trash page
+    total = prefix + suffix
+    k2 = k_arena.at[0].set(999.0)
+    v2 = v_arena.at[0].set(-999.0)
+    k2 = k2.at[pt[1], total - ps:].set(777.0)
+    v2 = v2.at[pt[1], total - ps:].set(-777.0)
+    k2 = k2.at[pt[2]].set(555.0)
+    v2 = v2.at[pt[2]].set(-555.0)
+    out2 = paged_append_attention_pallas(q, k2, v2, pt, lens)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
 
 

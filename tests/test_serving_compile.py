@@ -1,8 +1,8 @@
 """Engine compile stability: the continuous-batching engine must run all
-fixed-shape jitted functions (decode step, sampling, slot insert) from a
-single trace no matter how the serving mix changes. The engine's
-``trace_counts`` increment inside each traced body, so a retrace is
-directly observable."""
+fixed-shape jitted functions (decode step, sampling, page copy) from a
+single trace no matter how the serving mix changes, and prefill from at
+most one trace per power-of-two pad bucket. The engine's ``trace_counts``
+increment inside each traced body, so a retrace is directly observable."""
 import pytest
 
 from repro.serving.engine import Request, make_edge_engine
@@ -31,31 +31,38 @@ def test_decode_traces_once_across_stream_shapes(engine):
     assert engine.trace_counts["decode"] == 1
 
 
-def test_sample_and_insert_trace_counts_stable(engine):
+def test_sample_copy_and_insert_trace_counts_stable(engine):
     """Sampling compiles once per logits batch shape (1 for admission,
-    max_batch for decode); the slot insert compiles exactly once."""
+    max_batch for decode); the CoW page copy compiles at most once; the
+    paged engine never uses the contiguous lane insert (suffix prefill
+    writes straight into pages)."""
     before = dict(engine.trace_counts)
     engine.generate([Request("hello world", max_new_tokens=4),
                      Request("x" * 70, max_new_tokens=3)])
-    assert engine.trace_counts["insert"] == before["insert"] == 1
+    assert engine.trace_counts["insert"] == before["insert"] == 0
     assert engine.trace_counts["sample"] == before["sample"] == 2
+    assert engine.trace_counts["copy"] <= 1
 
 
-def test_prefill_compiles_per_chunk_bucket_only(engine):
-    """Prefill pads prompts to q_chunk multiples: a prompt landing in an
-    already-seen bucket must not add a trace."""
-    qc = max(engine.cfg.q_chunk, 1)
+def test_prefill_compiles_per_pow2_bucket_only(engine):
+    """Prefill pads the (suffix) prompt to power-of-two buckets: a prompt
+    landing in an already-seen bucket must not add a trace, and total
+    prefill traces stay bounded by the bucket count."""
     before = engine.trace_counts["prefill"]
-    engine.generate([Request("a" * (qc + 5), max_new_tokens=2)])   # 2-chunk
+    engine.generate([Request("a" * 69, max_new_tokens=2)])   # bucket 128
     mid = engine.trace_counts["prefill"]
-    engine.generate([Request("b" * (qc + 9), max_new_tokens=2)])   # same
+    engine.generate([Request("b" * 73, max_new_tokens=2)])   # same bucket
     assert engine.trace_counts["prefill"] == mid
     assert mid - before <= 1
+    # lifetime bound: buckets are 8, 16, ..., max_seq
+    assert engine.pad_buckets == [8, 16, 32, 64, 128]
+    assert engine.trace_counts["prefill"] <= len(engine.pad_buckets)
 
 
 def test_scheduler_pump_does_not_retrace(engine):
     """Continuous admission through the scheduler — slots freeing and
-    refilling at varying occupancy — keeps the single decode trace."""
+    refilling at varying occupancy, prefix hits remapping shared pages —
+    keeps the single decode trace."""
     sched = TierScheduler({"edge": engine})
     for i in range(9):
         sched.submit(Request(f"req {i} " + "y" * (3 * i),
@@ -66,11 +73,26 @@ def test_scheduler_pump_does_not_retrace(engine):
 
 
 def test_warmup_precompiles_everything(engine):
-    """After warmup, serving previously-unseen prompt lengths in existing
-    buckets triggers zero traces of any kind."""
-    engine.warmup([1, engine.cfg.q_chunk + 1])
+    """After warmup, serving previously-unseen prompt lengths — including
+    prefix-cache hits whose suffix lands in a SMALLER bucket than any full
+    prompt — triggers zero traces of any kind."""
+    engine.warmup([1, engine.max_seq])     # compiles every pow2 bucket
     before = dict(engine.trace_counts)
     engine.generate([Request("z" * 30, max_new_tokens=2),
+                     Request("z" * 30 + "!", max_new_tokens=2),   # hit
                      Request("w" * (engine.cfg.q_chunk + 20),
                              max_new_tokens=2)])
     assert engine.trace_counts == before
+
+
+def test_contiguous_insert_still_single_trace():
+    """The contiguous fallback keeps the lane insert and compiles it
+    exactly once across a mixed stream."""
+    eng = make_edge_engine(max_seq=64, max_batch=2, seed=0,
+                           kv_layout="contiguous")
+    eng.generate([Request("hello", max_new_tokens=2),
+                  Request("v" * 40, max_new_tokens=3),
+                  Request("w" * 20, max_new_tokens=2)])
+    assert eng.trace_counts["insert"] == 1
+    assert eng.trace_counts["decode"] == 1
+    assert eng.trace_counts["copy"] == 0

@@ -1,15 +1,18 @@
-"""Paged KV-cache engine: allocator accounting, page-gated admission,
-token-identity with the contiguous layout, and compile stability."""
+"""Paged KV-cache engine: refcounted allocator + prefix-cache lifecycle,
+page-gated admission, copy-on-write tail sharing, token-identity with the
+contiguous layout (and with the prefix cache off), and compile stability."""
 import numpy as np
 import pytest
 
 from repro.serving.engine import Request, make_edge_engine
-from repro.serving.paging import PageAllocator, pages_needed
+from repro.serving.paging import (
+    PageAllocator, PagingError, PrefixCache, pages_needed,
+)
 from repro.serving.scheduler import TierScheduler
 
 
 # ---------------------------------------------------------------------------
-# Allocator
+# Allocator: refcounts, guards, LRU retention
 # ---------------------------------------------------------------------------
 
 def test_allocator_distinct_ids_and_recycling():
@@ -19,21 +22,116 @@ def test_allocator_distinct_ids_and_recycling():
     ids = np.concatenate([x, y])
     assert len(set(ids.tolist())) == 8 and 0 not in ids    # distinct, no trash
     assert a.free_pages == 0
-    with pytest.raises(RuntimeError):
+    with pytest.raises(PagingError):
         a.alloc(1)
     a.free(x)
     assert a.free_pages == 3
     z = a.alloc(3)
     assert sorted(z.tolist()) == sorted(x.tolist())        # recycled
-    with pytest.raises(AssertionError):
-        a.free([int(z[0]), int(z[0])])                     # double free
 
+def test_allocator_guards_raise_real_exceptions():
+    """Bookkeeping violations raise PagingError (a RuntimeError), not bare
+    asserts that vanish under ``python -O``."""
+    a = PageAllocator(4)
+    ids = a.alloc(2)
+    with pytest.raises(PagingError):
+        a.free([int(ids[0]), int(ids[0])])                 # double free
+    with pytest.raises(PagingError):
+        a.free([0])                                        # trash page
+    with pytest.raises(PagingError):
+        a.free([99])                                       # foreign id
+    with pytest.raises(PagingError):
+        a.ref([int(a._free[-1])])                          # ref of free page
+    assert issubclass(PagingError, RuntimeError)
 
 def test_pages_needed_rounding():
     assert pages_needed(1, 16) == 1
     assert pages_needed(16, 16) == 1
     assert pages_needed(17, 16) == 2
     assert pages_needed(0, 16) == 1
+
+def test_refcount_share_fork_free_lifecycle():
+    """A page mapped by several slots is released only by the LAST free."""
+    a = PageAllocator(4)
+    (pid,) = a.alloc(1).tolist()
+    a.ref([pid])                      # second slot maps the same page
+    a.ref([pid])                      # third
+    assert a.refcount(pid) == 3
+    a.free([pid])
+    a.free([pid])
+    assert a.refcount(pid) == 1 and a.free_pages == 3      # still mapped
+    with pytest.raises(PagingError):
+        a.alloc(4)                    # page is not reclaimable while mapped
+    a.free([pid])
+    assert a.free_pages == 4          # decrement-to-zero released it
+
+def test_lru_retention_and_demand_eviction():
+    """retain=True parks refcount-0 pages in the LRU pool: available but not
+    free; ``ref`` revives them; alloc evicts oldest-first via evict_cb."""
+    a = PageAllocator(4)
+    evicted = []
+    a.evict_cb = evicted.append
+    keep = {1, 2, 3, 4}
+    p1 = a.alloc(2)          # say pages [4, 3]
+    p2 = a.alloc(2)
+    a.free(p1, retain=keep.__contains__)
+    assert a.free_pages == 0 and a.cached_pages == 2 and a.available_pages == 2
+    # revival: ref pulls a cached page back to refcount 1 with no device work
+    a.ref([int(p1[0])])
+    assert a.cached_pages == 1 and a.refcount(int(p1[0])) == 1
+    a.free([int(p1[0])], retain=keep.__contains__)
+    # demand eviction: alloc(2) must evict both cached pages, oldest first
+    got = a.alloc(2)
+    assert sorted(got.tolist()) == sorted(p1.tolist())
+    assert a.cached_pages == 0 and sorted(evicted) == sorted(p1.tolist())
+    a.free(got)
+    a.free(p2)
+
+def test_can_reserve_counts_revived_pages_once():
+    a = PageAllocator(3)
+    ids = a.alloc(3)
+    a.free(ids, retain=lambda p: True)        # all cached
+    assert a.available_pages == 3
+    reuse = [int(ids[0])]
+    assert a.can_reserve(2, reuse)            # revive 1, evict 2 -> fits
+    assert not a.can_reserve(3, reuse)        # 3 fresh + 1 revived > pool
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache: chain hashes, tails, eviction
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_match_insert_roundtrip():
+    pc = PrefixCache(4)
+    toks = list(range(11))                    # 2 full blocks + 3-token tail
+    pc.insert(toks, [10, 11, 12])
+    pages, tail = pc.match(toks[:10])         # capped at L-1
+    assert pages == [10, 11]
+    assert tail == (12, 2)                    # 2 of the 3 tail tokens usable
+    # diverging second block breaks the chain after block 0
+    pages, tail = pc.match([0, 1, 2, 3, 9, 9, 9, 9])
+    assert pages == [10] and tail is None
+    # partial tail match: first token of the tail agrees
+    pages, tail = pc.match(toks[:8] + [8, 77])
+    assert pages == [10, 11] and tail == (12, 1)
+
+def test_prefix_cache_forget_drops_all_keys():
+    pc = PrefixCache(4)
+    pc.insert(list(range(6)), [5, 6])
+    assert pc.owns(5) and pc.owns(6)
+    pc.forget(5)
+    assert not pc.owns(5)
+    pages, tail = pc.match(list(range(5)))
+    assert pages == [] and tail is None       # chain root gone -> full miss
+    pc.forget(6)
+    assert len(pc) == 0
+
+def test_prefix_cache_first_writer_wins():
+    pc = PrefixCache(2)
+    pc.insert([1, 2, 3, 4], [7, 8])
+    pc.insert([1, 2, 3, 4], [9, 9])           # same blocks, other pages
+    pages, _ = pc.match([1, 2, 3])
+    assert pages == [7]                       # canonical page kept
 
 
 # ---------------------------------------------------------------------------
@@ -43,9 +141,8 @@ def test_pages_needed_rounding():
 @pytest.fixture(scope="module")
 def paged():
     eng = make_edge_engine(max_seq=96, max_batch=3, seed=0)   # auto -> paged
-    assert eng.kv_layout == "paged"
+    assert eng.kv_layout == "paged" and eng._prefix is not None
     return eng
-
 
 @pytest.fixture(scope="module")
 def contiguous():
@@ -62,8 +159,9 @@ REQS = [Request("What is the capital of France?", max_new_tokens=6),
 
 
 def test_paged_greedy_token_identical_to_contiguous(paged, contiguous):
-    """The tentpole acceptance: greedy decode through the page arena emits
-    exactly the tokens the contiguous per-slot lanes emit."""
+    """The tentpole acceptance: greedy decode through the page arena —
+    prefix sharing, CoW tails and suffix prefill included — emits exactly
+    the tokens the contiguous per-slot lanes emit."""
     out_p, _ = paged.generate(REQS)
     out_c, _ = contiguous.generate(REQS)
     assert out_p == out_c
@@ -71,27 +169,72 @@ def test_paged_greedy_token_identical_to_contiguous(paged, contiguous):
     static, _ = paged.generate_static(REQS[:3])
     assert static == out_p[:3]
 
+def test_prefix_sharing_on_vs_off_token_identical():
+    """Greedy outputs must not depend on whether prompts were prefilled
+    from scratch or assembled from shared pages + CoW tail + suffix."""
+    ctx = "shared retrieved context: the Eiffel Tower is in Paris. "
+    reqs = [Request(ctx + q, max_new_tokens=8)
+            for q in ("who?", "where?", "when?", "why?")]
+    on = make_edge_engine(max_seq=128, max_batch=4, seed=0)
+    off = make_edge_engine(max_seq=128, max_batch=4, seed=0,
+                           prefix_cache=False)
+    out_on, st_on = on.generate(reqs)
+    out_off, st_off = off.generate(reqs)
+    assert out_on == out_off
+    assert st_on.prefix_hits == 3 and st_on.prefix_misses == 1
+    assert st_on.prefix_tokens_shared >= 3 * (len(ctx) // on.page_size
+                                              * on.page_size)
+    assert st_off.prefix_hits == 0 and st_off.prefix_tokens_shared == 0
+
+def test_shared_pages_counted_once(paged):
+    """Two residents sharing a prefix hold the shared pages at refcount 2
+    and together consume fewer pages than two independent requests."""
+    drain(paged)
+    base = paged.available_pages
+    r1 = Request("z" * 40, max_new_tokens=4)
+    r2 = Request("z" * 40, max_new_tokens=4)
+    need = pages_needed(41 + 4, paged.page_size)
+    paged.admit(r1)
+    used1 = base - paged.available_pages
+    assert used1 == need
+    paged.admit(r2)
+    used2 = base - paged.available_pages
+    # second request allocates fresh pages only for CoW tail + budget
+    assert used2 < 2 * need
+    shared = paged._page_tables[0][: 41 // paged.page_size]
+    for pid in shared:
+        assert paged._allocator.refcount(int(pid)) == 2
+    drain(paged)
+    assert paged.available_pages == base
+
+def drain(eng):
+    while eng.has_active:
+        eng.step()
 
 def test_pages_recycled_after_drain(paged):
-    assert paged.free_pages == paged.num_pages
+    drain(paged)
+    assert paged.available_pages == paged.num_pages
     paged.generate(REQS)
-    assert paged.free_pages == paged.num_pages
+    assert paged.available_pages == paged.num_pages
     assert not paged.has_active
     assert (paged._page_tables == 0).all()
+    # retained prefix pages are CACHED (reclaimable), not leaked or free
+    assert paged.cached_pages > 0
+    assert paged.free_pages + paged.cached_pages == paged.num_pages
 
-
-def test_page_reservation_matches_prompt_plus_budget(paged):
+def test_page_reservation_matches_prompt_plus_budget():
     """While a request is resident it holds exactly
-    ceil((prompt + budget) / page_size) pages."""
+    ceil((prompt + budget) / page_size) pages (prefix cache off: every page
+    is private)."""
+    eng = make_edge_engine(max_seq=96, max_batch=3, seed=0,
+                           prefix_cache=False)
     r = Request("hello world", max_new_tokens=10)
-    L = len(paged.tok.encode(r.prompt))
-    need = pages_needed(L + 10, paged.page_size)
-    paged.admit(r)
-    assert paged.free_pages == paged.num_pages - need
-    while paged.has_active:
-        paged.step()
-    assert paged.free_pages == paged.num_pages
-
+    L = len(eng.tok.encode(r.prompt))
+    need = pages_needed(L + 10, eng.page_size)
+    eng.admit(r)
+    assert eng.free_pages == eng.num_pages - need
+    drain(eng)
+    assert eng.free_pages == eng.num_pages
 
 def test_decode_never_retraces_across_mixed_stream(paged):
     before = paged.trace_counts["decode"]
@@ -99,8 +242,38 @@ def test_decode_never_retraces_across_mixed_stream(paged):
             for i in range(8)]
     paged.generate(reqs)
     assert paged.trace_counts["decode"] == before
-    assert paged.trace_counts["insert"] == 1
+    # the paged path writes prefill straight into pages: no insert ever
+    assert paged.trace_counts["insert"] == 0
+    assert paged.trace_counts["copy"] <= 1
 
+def test_lru_eviction_under_page_pressure():
+    """A pool far smaller than the distinct-prompt working set must keep
+    admitting (evicting stale cached prefixes) and never corrupt outputs."""
+    eng = make_edge_engine(max_seq=64, max_batch=2, seed=0,
+                           num_pages=2 * (64 // 16))
+    ref = make_edge_engine(max_seq=64, max_batch=2, seed=0,
+                           prefix_cache=False,
+                           num_pages=2 * (64 // 16))
+    reqs = [Request(f"distinct prompt number {i} padded out", max_new_tokens=3)
+            for i in range(6)]
+    out, _ = eng.generate(reqs)
+    out_ref, _ = ref.generate(reqs)
+    assert out == out_ref
+    assert eng.available_pages == eng.num_pages
+    # the tiny pool cannot retain every prompt: evictions must have fired
+    assert eng.cached_pages <= eng.num_pages
+
+def test_cached_prefix_survives_completion_and_rehits():
+    """LRU retention: a prompt admitted AFTER its twin completed still hits
+    — the refcount-0 pages kept their KV."""
+    eng = make_edge_engine(max_seq=128, max_batch=2, seed=0)
+    r = Request("the quick brown fox jumps over the lazy dog",
+                max_new_tokens=4)
+    eng.generate([r])
+    assert eng.prefix_hits == 0
+    out2, st = eng.generate([Request(r.prompt, max_new_tokens=4)])
+    assert st.prefix_hits == 1
+    assert st.prefix_tokens_shared == len(eng.tok.encode(r.prompt)) - 1
 
 def test_admission_blocks_on_pages_not_slots():
     """With a page pool far smaller than the slot pool, residency is bounded
@@ -113,21 +286,19 @@ def test_admission_blocks_on_pages_not_slots():
     eng.admit(big)
     small = Request("hi", max_new_tokens=2)
     assert eng.free_slots > 0 and not eng.can_admit(small)
-    with pytest.raises(RuntimeError):
+    with pytest.raises(PagingError):
         eng.admit(small)
-    while eng.has_active:
-        eng.step()
+    drain(eng)
     assert eng.can_admit(small)
     sched = TierScheduler({"edge": eng})
     for i in range(6):                    # 6 free slots, but only 4 pages
         sched.submit(Request(f"q{i}", max_new_tokens=2), "edge")
     done = sched.drain()
     assert len(done) == 6
-    assert eng.free_pages == eng.num_pages
+    assert eng.available_pages == eng.num_pages
     # each small request needs 1 page: with 6 slots free the scheduler still
     # only reaches 4 residents — pages, not slots, were the binding limit
     assert eng.peak_active == 4
-
 
 def test_more_residents_than_equal_memory_contiguous():
     """At equal KV token capacity, short requests pack >2x more resident
@@ -141,7 +312,6 @@ def test_more_residents_than_equal_memory_contiguous():
     eng.generate(reqs)
     assert eng.peak_active >= 2 * base_batch
 
-
 def test_contiguous_layout_still_available():
     eng = make_edge_engine(max_seq=64, max_batch=2, kv_layout="contiguous")
     assert eng.kv_layout == "contiguous"
@@ -149,7 +319,6 @@ def test_contiguous_layout_still_available():
     assert eng.can_admit(Request("x"))
     texts, _ = eng.generate([Request("hello", max_new_tokens=3)])
     assert len(texts) == 1
-
 
 def test_paged_rejected_for_unpageable_model():
     from repro.configs import get_config
