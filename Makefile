@@ -2,14 +2,20 @@
 PY ?= python
 export PYTHONPATH := src:.
 
-.PHONY: test bench-smoke bench-serving bench-serving-smoke bench-kernels
+.PHONY: test test-opt bench-smoke bench-serving bench-serving-smoke \
+	bench-kernels bench-cluster-smoke
 
 test:
 	$(PY) -m pytest -x -q
 
+# the guard-path tests under python -O: bare asserts are stripped there, so
+# this lane proves the engine/scheduler guards are real exceptions
+test-opt:
+	$(PY) -O -m pytest tests/test_scheduler.py tests/test_cluster_engines.py -q
+
 # tiny-size benchmark smoke: serving (static vs continuous + paged vs
-# contiguous + prefix-cache scenarios) + kernels
-bench-smoke: bench-kernels bench-serving-smoke
+# contiguous + prefix-cache scenarios) + kernels + closed-loop cluster
+bench-smoke: bench-kernels bench-serving-smoke bench-cluster-smoke
 
 # serving benchmark smoke (tiny config, prefix scenario included); leaves a
 # JSON artifact at results/benchmarks/serving_bench.json for CI to upload
@@ -26,3 +32,10 @@ bench-serving:
 # artifact at results/benchmarks/kernels_bench.json for CI to upload
 bench-kernels:
 	$(PY) -c "from benchmarks.kernels_bench import run; run(quick=True)"
+
+# closed-loop cluster smoke: eaco + the four fixed arms served end-to-end
+# through shared real engine pools on one virtual clock; checks every query
+# completes, zero decode retraces per engine, sane Table-4 cost structure.
+# Leaves results/benchmarks/cluster_bench.json for CI to upload
+bench-cluster-smoke:
+	$(PY) benchmarks/cluster_bench.py --smoke --check

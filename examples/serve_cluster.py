@@ -1,80 +1,115 @@
 """End-to-end tiered serving driver (the paper's deployment, miniaturized).
 
-Edge nodes run a REAL JAX serving engine (reduced qwen2-0.5b, byte
-tokenizer, slot-pool continuous-batching decode); the collaborative gate
-routes each query to {local SLM, edge RAG + SLM, cloud GraphRAG + SLM,
-cloud LLM}. Queries routed to a local arm are submitted to a
-TierScheduler, which streams them through the engine's KV-cache slots
-while the simulation keeps stepping — completions surface asynchronously
-with their queue-wait and time-in-engine. Quality scoring uses the
-calibrated oracle (DESIGN.md §5).
+``--backend engines`` (the default) runs the CLOSED loop: the collaborative
+gate routes each query to {local SLM, edge RAG + SLM, cloud GraphRAG + SLM,
+cloud LLM}, and every decision is served by a REAL JAX engine — a pool of
+edge SLM engines (reduced qwen2-0.5b, paged KV + prefix cache) and one
+cloud-tier engine (reduced qwen2-72b family) behind a TierScheduler.
+Arrivals are bursty multi-user; arrival stamps, queue waits, engine service
+time and network transit all compose on ONE virtual clock
+(``--engine-time modeled`` is deterministic per seed; ``wall`` advances by
+the measured jit seconds instead). Completions flow back asynchronously
+with real token counts feeding the cost model and the gate's SafeOBO
+update. Quality scoring uses the calibrated oracle (DESIGN.md §5).
 
-Run:  PYTHONPATH=src python examples/serve_cluster.py [--steps 40]
+``--backend oracle`` is the original analytic fast path: the same gate and
+retrieval, but cost/delay come from the paper's cost model and Table 1
+token draws; the retrieved texts ride on ``StepLog.retrieved``.
+
+Run:  PYTHONPATH=src python examples/serve_cluster.py [--steps 12]
+      PYTHONPATH=src python examples/serve_cluster.py --backend oracle \
+          --policy fixed:3 --steps 40
 """
 import argparse
 
 from repro.cluster.simulator import EACOCluster, SimConfig
 from repro.data.corpus import wiki_like
-from repro.serving import Request, TierScheduler, make_edge_engine
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=40)
-    ap.add_argument("--warmup", type=int, default=20)
-    ap.add_argument("--max-real", type=int, default=6,
-                    help="max queries actually decoded on the edge engine")
+    ap.add_argument("--steps", type=int, default=12,
+                    help="arrival steps (one virtual arrival period each)")
+    ap.add_argument("--warmup", type=int, default=20,
+                    help="gate warmup steps (SafeOBO)")
+    ap.add_argument("--backend", choices=("engines", "oracle"),
+                    default="engines")
+    ap.add_argument("--policy", default="eaco",
+                    help="'eaco' or 'fixed:<0..3>'")
+    ap.add_argument("--edge-engines", type=int, default=2,
+                    help="edge SLM pool size (engines backend)")
+    ap.add_argument("--mean-arrivals", type=float, default=1.5,
+                    help="Poisson mean queries per arrival step")
+    ap.add_argument("--hot-topic-boost", type=float, default=0.2,
+                    help="extra interest mass on each edge's hot topic")
+    ap.add_argument("--engine-time", choices=("modeled", "wall"),
+                    default="modeled",
+                    help="virtual-clock service time: tier-spec rates on "
+                         "real token counts, or measured jit seconds")
     args = ap.parse_args()
 
     corpus = wiki_like(seed=0)
-    sim = EACOCluster(
-        corpus, SimConfig(seed=0, warmup_steps=args.warmup,
-                          qos_min_acc=0.85, qos_max_delay=5.0),
-        policy="eaco")
-    engine = make_edge_engine(max_seq=384, max_batch=2, seed=0)
-    sched = TierScheduler({"edge": engine})
-    print("edge engine:", engine.cfg.arch_id, "(reduced)",
-          f"{engine.model.n_params():,} params,",
-          f"{engine.max_batch} KV-cache slots")
+    cfg = SimConfig(seed=0, warmup_steps=args.warmup, qos_min_acc=0.85,
+                    qos_max_delay=5.0, n_edges=4,
+                    n_edge_engines=args.edge_engines,
+                    mean_arrivals=args.mean_arrivals,
+                    hot_topic_boost=args.hot_topic_boost,
+                    engine_time=args.engine_time)
+    sim = EACOCluster(corpus, cfg, policy=args.policy, backend=args.backend)
 
-    n_real = 0
-    for i, ev in enumerate(sim.workload.stream(args.steps)):
-        log = sim.step(ev)
-        line = (f"[{i:03d}] {ev.edge_id} arm={log.arm_name:<13} "
-                f"hit={int(log.hit)} ok={int(log.correct)} "
-                f"delay={log.delay:.2f}s cost={log.cost:7.1f}")
-        if log.arm_name in ("slm-only", "edge-rag+slm") and n_real < args.max_real:
-            # REAL generation: enqueue for the continuous edge engine; the
-            # scheduler admits it whenever a slot frees up.
-            retrieved, _, _ = sim._retrieve(sim.gate.arms[log.arm], ev)
-            ctx_text = " ".join(retrieved[:2])[:256]
-            prompt = f"Context: {ctx_text}\nQ: {ev.qa.question}\nA:"
-            sched.submit(Request(prompt, max_new_tokens=12), "edge",
-                         deadline_s=sim.cfg.qos_max_delay)
-            n_real += 1
-            line += "  | submitted to edge engine"
-        print(line)
-        # pump the slot pool once per sim step: admissions + one decode
-        for c in sched.pump():
-            print(f"      <- edge decode done: {c.new_tokens} tok "
-                  f"(queue {c.queue_wait_s*1e3:.0f}ms, "
-                  f"engine {c.time_in_engine_s*1e3:.0f}ms)")
-
-    done = sched.drain()
-    for c in done:
-        print(f"      <- edge decode done: {c.new_tokens} tok "
-              f"(queue {c.queue_wait_s*1e3:.0f}ms, "
-              f"engine {c.time_in_engine_s*1e3:.0f}ms)")
+    if args.backend == "oracle":
+        for i, ev in enumerate(sim.workload.stream(args.steps)):
+            log = sim.step(ev)
+            print(f"[{i:03d}] {ev.edge_id} arm={log.arm_name:<13} "
+                  f"hit={int(log.hit)} ok={int(log.correct)} "
+                  f"delay={log.delay:.2f}s cost={log.cost:7.1f} "
+                  f"retrieved={len(log.retrieved)} chunks")
+    else:
+        for pool_name, pool in sim.sched.pools.items():
+            for j, e in enumerate(pool):
+                print(f"{pool_name}[{j}]: {e.cfg.arch_id} (reduced) "
+                      f"{e.model.n_params():,} params, {e.max_batch} slots, "
+                      f"{e.num_pages} KV pages")
+        # drive the loop by hand (sim.run does the same) so completions can
+        # be printed as they surface on the virtual clock
+        for step, events in enumerate(sim.workload.bursts(args.steps,
+                                                          clock=sim.clock)):
+            for ev in events:
+                sim.submit_query(ev)
+                print(f"[{step:03d} t={sim.clock.now():7.2f}s] {ev.edge_id} "
+                      f"arrive: {ev.qa.question[:48]!r}")
+            target = sim.clock.now() + cfg.arrival_period_s
+            while ((sim.sched.pending() or sim.sched.in_flight())
+                   and sim.clock.now() < target):
+                before = sim.clock.now()
+                for log in sim.pump_engines():
+                    print(f"      <- {log.tier} done arm={log.arm_name:<13} "
+                          f"queue {log.queue_wait_s*1e3:5.0f}ms | engine "
+                          f"{log.engine_s*1e3:5.0f}ms | delay "
+                          f"{log.delay:.2f}s | {log.out_tokens:.0f} tok | "
+                          f"cost {log.cost:7.1f}")
+                if sim.clock.now() <= before:
+                    break
+            if sim.clock.now() < target:
+                sim.clock.advance(target - sim.clock.now())
+        for log in sim.drain_engines():
+            print(f"      <- {log.tier} done arm={log.arm_name:<13} "
+                  f"queue {log.queue_wait_s*1e3:5.0f}ms | engine "
+                  f"{log.engine_s*1e3:5.0f}ms | delay {log.delay:.2f}s | "
+                  f"{log.out_tokens:.0f} tok | cost {log.cost:7.1f}")
 
     m = sim.metrics(skip_warmup=False)
     print(f"\nserved {m['n']} queries: acc={m['accuracy']:.3f} "
-          f"delay={m['delay_mean']:.2f}s cost={m['cost_mean']:.1f} TFLOPs")
-    if n_real:
-        print(f"real edge decodes: {n_real} via {engine.max_batch}-slot "
-              f"continuous batching (engine time: prefill "
-              f"{engine.prefill_s:.1f}s + decode {engine.decode_s:.1f}s on "
-              f"CPU; untrained weights -> text is noise, the engine is "
-              f"real); decode traces: {engine.decode_traces}")
+          f"delay={m['delay_mean']:.2f}s cost={m['cost_mean']:.1f} TFLOPs "
+          f"queue_wait={m['queue_wait_mean']*1e3:.0f}ms")
+    if args.backend == "engines":
+        for pool_name, pool in sim.sched.pools.items():
+            for j, e in enumerate(pool):
+                print(f"{pool_name}[{j}]: prefilled {e.prefill_tokens} tok, "
+                      f"{e.decode_rounds} decode rounds, prefix hits "
+                      f"{e.prefix_hits}/{e.prefix_hits + e.prefix_misses}, "
+                      f"decode traces {e.decode_traces} (untrained weights "
+                      f"-> text is noise, the engines are real)")
 
 
 if __name__ == "__main__":

@@ -20,8 +20,10 @@ class NetworkConfig:
 
 
 class NetworkModel:
-    def __init__(self, cfg: NetworkConfig = NetworkConfig(), seed: int = 0):
-        self.cfg = cfg
+    def __init__(self, cfg: "NetworkConfig | None" = None, seed: int = 0):
+        # default built per instance: a module-level default evaluated at
+        # ``def`` time would be shared (and mutable) across every caller
+        self.cfg = NetworkConfig() if cfg is None else cfg
         self.rng = np.random.default_rng(seed)
 
     def _jit(self, base_ms: float) -> float:

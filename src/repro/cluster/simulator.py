@@ -1,6 +1,29 @@
 """The EACO-RAG tiered serving simulator: real retrieval + gating + adaptive
-knowledge updates over an edge-cloud topology, with the calibrated accuracy
-oracle (DESIGN.md §5) and the paper's cost model.
+knowledge updates over an edge-cloud topology.
+
+Two backends:
+
+* ``backend="oracle"`` (default) — the calibrated accuracy oracle
+  (DESIGN.md §5) plus the paper's cost model score each gate decision
+  analytically; token counts are drawn from Table 1 distributions. This is
+  the fast path used by the Table 4/5/6 benchmarks.
+
+* ``backend="engines"`` — the closed loop. Every gate ``Decision`` builds
+  the real prompt (query + retrieved context from the edge stores /
+  GraphRAG) and submits it through a :class:`TierScheduler` to per-tier
+  :class:`ServingEngine` pools: edge SLM engines (reduced qwen2-0.5b,
+  paged KV + prefix cache on) and one larger cloud-tier engine (reduced
+  qwen2-72b family). Arrivals are bursty multi-user
+  (``WorkloadGenerator.bursts``), and everything — arrival stamps, queue
+  waits, engine service time, network transit — composes on ONE
+  :class:`VirtualClock`: per scheduling round the clock advances by the
+  engines' service time, either ``engine_time="modeled"`` (the tier spec's
+  prefill/decode rates applied to the REAL token counts the engines
+  processed — deterministic under a fixed seed) or ``"wall"`` (the
+  measured jit compute time). Completions flow back as measured delay
+  (queue wait + time in engine + network transit) and real token counts
+  feeding the cost model and the gate's SafeOBO update — replacing the
+  drawn ``OUT_TOKENS``.
 
 Policies: "eaco" (collaborative gate) or "fixed:<arm_idx>" baselines —
 fixed:0 = SLM-only, fixed:1 = naive edge RAG, fixed:2 = 3B+GraphRAG,
@@ -10,13 +33,15 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.clock import VirtualClock
 from repro.core.cost_model import (
     PAPER_CLOUD, PAPER_EDGE, RETRIEVAL_DELAY_S, CostWeights, TierSpec,
-    generation_delay, inference_tflops, time_cost_tflops, total_cost,
+    generation_delay, inference_tflops, modeled_decode_round_s,
+    modeled_prefill_s, time_cost_tflops, total_cost,
 )
 from repro.core.edge_assist import edge_assisted_search, query_keywords, select_edge
 from repro.core.gating import (
@@ -29,6 +54,10 @@ from repro.cluster.workload import QueryEvent, WorkloadConfig, WorkloadGenerator
 from repro.data.corpus import Corpus
 from repro.retrieval.graph_rag import KnowledgeGraph
 from repro.retrieval.store import VectorStore
+from repro.serving.engine import (
+    Request, ServingEngine, make_cloud_engine, make_edge_engine,
+)
+from repro.serving.scheduler import Completion, TierScheduler
 
 # calibration: the paper uses ~500-token chunks; our synthetic chunks are
 # ~95 tokens, so prompt sizes are scaled to match Table 1 token statistics.
@@ -65,6 +94,10 @@ class StepLog:
     in_tokens: float
     out_tokens: float
     phase: str = ""
+    retrieved: List[str] = field(default_factory=list)
+    tier: str = ""                  # engines backend: serving tier name
+    queue_wait_s: float = 0.0       # engines backend: submit -> admission
+    engine_s: float = 0.0           # engines backend: admission -> finish
 
 
 @dataclass
@@ -85,26 +118,67 @@ class SimConfig:
     drift_period: float = 250.0
     edge_assist_enabled: bool = True   # False = local-store-only (Fig. 4)
     seed: int = 0
+    # ---- engines backend (backend="engines") --------------------------
+    n_edge_engines: int = 2         # pool size behind the "edge" tier
+    edge_max_seq: int = 192
+    edge_max_batch: int = 4
+    cloud_max_seq: int = 256
+    cloud_max_batch: int = 4
+    engine_page_size: int = 16
+    max_new_slm: int = 16           # decode budget, non-graph arms
+    max_new_graph: int = 48         # decode budget, GraphRAG arms
+    arrival_period_s: float = 1.0   # virtual seconds between arrival steps
+    engine_time: str = "modeled"    # "modeled" (deterministic) | "wall"
+    mean_arrivals: float = 1.5      # Poisson mean queries per arrival step
+    max_arrivals: int = 6           # burst cap per step
+    hot_topic_boost: float = 0.0    # extra interest mass on the hot topic
+
+
+@dataclass
+class _Pending:
+    """Host-side record of a submitted query, joined to its Completion."""
+    ev: QueryEvent
+    qc: QueryContext
+    arm: Arm
+    hit: bool
+    texts: List[str]
+    net_delay_s: float
+    phase: str
+    request: Request
 
 
 class EACOCluster:
-    def __init__(self, corpus: Corpus, cfg: SimConfig = SimConfig(),
+    def __init__(self, corpus: Corpus, cfg: Optional[SimConfig] = None,
                  policy: str = "eaco",
                  edge_tier: TierSpec = PAPER_EDGE,
                  cloud_tier: TierSpec = PAPER_CLOUD,
-                 oracle: Optional[AccuracyOracle] = None):
+                 oracle: Optional[AccuracyOracle] = None,
+                 backend: str = "oracle",
+                 engines: Optional[Dict[str, Union[
+                     ServingEngine, Sequence[ServingEngine]]]] = None,
+                 clock: Optional[VirtualClock] = None):
         self.corpus = corpus
-        self.cfg = cfg
+        # default built per instance — a shared default SimConfig would let
+        # one caller's mutation leak into every later default construction
+        self.cfg = cfg = SimConfig() if cfg is None else cfg
         self.policy = policy
         self.edge_tier = edge_tier
         self.cloud_tier = cloud_tier
+        if backend not in ("oracle", "engines"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if cfg.engine_time not in ("modeled", "wall"):
+            raise ValueError(f"unknown engine_time {cfg.engine_time!r}")
+        self.backend = backend
         self.weights = CostWeights(cfg.delta1, cfg.delta2)
         self.rng = np.random.default_rng(cfg.seed)
         self.oracle = oracle or AccuracyOracle(seed=cfg.seed + 1)
         self.net = NetworkModel(seed=cfg.seed + 2)
         self.workload = WorkloadGenerator(
             corpus, WorkloadConfig(n_edges=cfg.n_edges,
-                                   drift_period=cfg.drift_period),
+                                   drift_period=cfg.drift_period,
+                                   mean_arrivals=cfg.mean_arrivals,
+                                   max_arrivals=cfg.max_arrivals,
+                                   hot_topic_boost=cfg.hot_topic_boost),
             seed=cfg.seed + 3)
         # cloud knowledge graph over the full corpus
         self.graph = KnowledgeGraph(seed=cfg.seed).build(corpus.chunks)
@@ -127,6 +201,34 @@ class EACOCluster:
             warmup_steps=cfg.warmup_steps, beta=cfg.beta, seed=cfg.seed,
             n_edges=cfg.n_edges)
         self.logs: List[StepLog] = []
+        # ---- engines backend: one virtual clock, real engine pools -----
+        self.clock = VirtualClock() if clock is None else clock
+        self.sched: Optional[TierScheduler] = None
+        self._pending: Dict[int, _Pending] = {}
+        if backend == "engines":
+            if engines is None:
+                engines = self.build_engines()
+            self.sched = TierScheduler(engines, clock=self.clock)
+            if set(self.sched.pools) != {"edge", "cloud"}:
+                raise ValueError(
+                    f"engines backend needs 'edge' and 'cloud' tiers, got "
+                    f"{sorted(self.sched.pools)}")
+
+    # ------------------------------------------------------------------
+    def build_engines(self) -> Dict[str, List[ServingEngine]]:
+        """Default tier pools: ``n_edge_engines`` reduced-SLM edge engines
+        plus one cloud-tier engine, paged KV + prefix cache on."""
+        c = self.cfg
+        edge = [make_edge_engine(
+            max_seq=c.edge_max_seq, max_batch=c.edge_max_batch,
+            seed=c.seed + 100 + i, kv_layout="paged",
+            page_size=c.engine_page_size, prefix_cache=True)
+            for i in range(c.n_edge_engines)]
+        cloud = [make_cloud_engine(
+            max_seq=c.cloud_max_seq, max_batch=c.cloud_max_batch,
+            seed=c.seed + 200, kv_layout="paged",
+            page_size=c.engine_page_size, prefix_cache=True)]
+        return {"edge": edge, "cloud": cloud}
 
     # ------------------------------------------------------------------
     def _retrieve(self, arm: Arm, ev: QueryEvent):
@@ -159,9 +261,9 @@ class EACOCluster:
         out_t = max(1.0, float(self.rng.normal(mu, sd)))
         return in_t, out_t
 
-    def _execute(self, arm: Arm, ev: QueryEvent, qc: QueryContext,
-                 texts: List[str], hit: bool) -> StepLog:
-        in_t, out_t = self._tokens(arm, ev.qa.question, texts)
+    def _tier_and_net(self, arm: Arm, qc: QueryContext
+                      ) -> Tuple[TierSpec, float]:
+        """Serving tier spec + network transit delay for an (arm, context)."""
         if arm.generation == "local":
             tier = self.edge_tier
             net_delay = qc.d_edge if arm.retrieval == "edge" else 0.005
@@ -171,6 +273,12 @@ class EACOCluster:
             tier = self.cloud_tier
             net_delay = qc.d_cloud
         net_delay += RETRIEVAL_DELAY_S[(arm.retrieval, arm.generation)]
+        return tier, net_delay
+
+    def _execute(self, arm: Arm, ev: QueryEvent, qc: QueryContext,
+                 texts: List[str], hit: bool) -> StepLog:
+        in_t, out_t = self._tokens(arm, ev.qa.question, texts)
+        tier, net_delay = self._tier_and_net(arm, qc)
         delay = generation_delay(tier, in_t, out_t, net_delay)
         u_r = inference_tflops(tier.model_params_b, in_t, out_t)
         u_d = time_cost_tflops(tier, delay)
@@ -180,7 +288,7 @@ class EACOCluster:
             t=ev.t, edge_id=ev.edge_id, arm=arm.idx, arm_name=arm.name,
             correct=correct, delay=delay, cost=cost, u_r=u_r, u_d=u_d,
             hit=hit, overlap=qc.overlap, multihop=ev.qa.multihop,
-            in_tokens=in_t, out_tokens=out_t)
+            in_tokens=in_t, out_tokens=out_t, retrieved=texts)
 
     def _context(self, ev: QueryEvent) -> QueryContext:
         sel = select_edge(self.stores, ev.qa.question, local_edge=ev.edge_id)
@@ -192,15 +300,22 @@ class EACOCluster:
         return QueryContext.analyze(ev.qa.question, d_cloud, d_edge,
                                     sel.overlap, sel.edge_id, edge_index)
 
-    def step(self, ev: QueryEvent) -> StepLog:
-        qc = self._context(ev)
+    def _decide(self, qc: QueryContext) -> Tuple[Arm, str]:
         if self.policy == "eaco":
             decision = self.gate.decide(qc)
-            arm = decision.arm
-            phase = decision.info.get("phase", "")
-        else:
-            arm = PAPER_ARMS[int(self.policy.split(":")[1])]
-            phase = "fixed"
+            return decision.arm, decision.info.get("phase", "")
+        return PAPER_ARMS[int(self.policy.split(":")[1])], "fixed"
+
+    def step(self, ev: QueryEvent) -> StepLog:
+        """Oracle backend: decide, retrieve ONCE, score analytically. The
+        retrieved texts ride on ``StepLog.retrieved`` so callers (and the
+        engines backend) never need to re-run retrieval."""
+        if self.backend == "engines":
+            raise RuntimeError(
+                "step() is the oracle path; use submit_query()/run() with "
+                "backend='engines'")
+        qc = self._context(ev)
+        arm, phase = self._decide(qc)
         texts, hit, _ = self._retrieve(arm, ev)
         log = self._execute(arm, ev, qc, texts, hit)
         log.phase = phase
@@ -214,9 +329,139 @@ class EACOCluster:
         self.logs.append(log)
         return log
 
+    # ------------------------------------------------------------------
+    # Engines backend: gate decision -> real engine -> completion -> update
+    # ------------------------------------------------------------------
+    def _build_prompt(self, ev: QueryEvent, texts: List[str],
+                      max_chars: int) -> str:
+        """Retrieved context first (shared across same-topic queries, so the
+        prefix cache can share its KV pages), question last; the context is
+        truncated to leave room for the question and decode budget."""
+        qpart = f"Q: {ev.qa.question}\nA:"
+        ctx = " ".join(texts)
+        ctx_budget = max(max_chars - len(qpart) - 10, 0)
+        if ctx and ctx_budget > 0:
+            return f"Context: {ctx[:ctx_budget]}\n{qpart}"
+        return qpart[:max_chars]
+
+    def submit_query(self, ev: QueryEvent) -> Request:
+        """One gate decision routed to a real engine: decide, retrieve,
+        build the prompt, submit to the tier's pool on the virtual clock.
+        The SafeOBO update happens when the completion surfaces."""
+        if self.sched is None:
+            raise RuntimeError("submit_query() requires backend='engines'")
+        cfg = self.cfg
+        qc = self._context(ev)
+        arm, phase = self._decide(qc)
+        texts, hit, _ = self._retrieve(arm, ev)
+        tier_name = "edge" if arm.generation == "local" else "cloud"
+        max_new = (cfg.max_new_graph if arm.retrieval == "graph"
+                   else cfg.max_new_slm)
+        max_seq = min(e.max_seq for e in self.sched.pools[tier_name])
+        prompt = self._build_prompt(ev, texts, max_seq - max_new - 8)
+        req = Request(prompt, max_new_tokens=max_new)
+        _, net_delay = self._tier_and_net(arm, qc)
+        now = self.clock.now()
+        self._pending[id(req)] = _Pending(ev, qc, arm, hit, texts,
+                                          net_delay, phase, req)
+        self.sched.submit(req, tier_name,
+                          deadline_s=now + cfg.qos_max_delay, now=now)
+        self.updater.observe_query(ev.edge_id, ev.qa.question,
+                                   self.stores[ev.edge_id], now=ev.t)
+        return req
+
+    def pump_engines(self) -> List[StepLog]:
+        """One scheduling round on the virtual clock: admit + one fused
+        decode step per engine, then advance the clock by the round's
+        service time — ``modeled`` (tier rates x real token counts;
+        deterministic) or ``wall`` (measured jit seconds). Pools run in
+        parallel, so the round costs the SLOWEST engine's time. Completions
+        harvested this round close the loop: measured delay and real token
+        counts feed the cost model and the gate."""
+        if self.sched is None:
+            raise RuntimeError("pump_engines() requires backend='engines'")
+        flat = [(t, e) for t, pool in self.sched.pools.items() for e in pool]
+        pre = [(e.prefill_tokens, e.decode_rounds, e.prefill_s + e.decode_s)
+               for _, e in flat]
+        comps = self.sched.pump(now=self.clock.now())
+        dt = 0.0
+        for (tier_name, e), (p0, r0, w0) in zip(flat, pre):
+            if self.cfg.engine_time == "wall":
+                dt_e = (e.prefill_s + e.decode_s) - w0
+            else:
+                spec = (self.edge_tier if tier_name == "edge"
+                        else self.cloud_tier)
+                dt_e = (modeled_prefill_s(spec, e.prefill_tokens - p0)
+                        + (e.decode_rounds - r0)
+                        * modeled_decode_round_s(spec))
+            dt = max(dt, dt_e)
+        if dt > 0:
+            self.clock.advance(dt)
+        return [self._finalize(c) for c in comps]
+
+    def _finalize(self, c: Completion) -> StepLog:
+        """Join a Completion back to its query: real token counts -> cost,
+        composed virtual-clock delay -> QoS, oracle -> accuracy, and (eaco)
+        the SafeOBO update that closes the control loop."""
+        p = self._pending.pop(id(c.request))
+        tier, _ = self._tier_and_net(p.arm, p.qc)
+        in_t = float(c.prompt_tokens)
+        out_t = float(max(c.new_tokens, 1))
+        delay = (tier.base_delay_s + p.net_delay_s
+                 + c.queue_wait_s + c.time_in_engine_s)
+        u_r = inference_tflops(tier.model_params_b, in_t, out_t)
+        u_d = time_cost_tflops(tier, delay)
+        cost = total_cost(u_r, u_d, self.weights)
+        correct = self.oracle.draw(p.arm.name, hit=p.hit,
+                                   multihop=p.ev.qa.multihop)
+        log = StepLog(
+            t=p.ev.t, edge_id=p.ev.edge_id, arm=p.arm.idx,
+            arm_name=p.arm.name, correct=correct, delay=delay, cost=cost,
+            u_r=u_r, u_d=u_d, hit=p.hit, overlap=p.qc.overlap,
+            multihop=p.ev.qa.multihop, in_tokens=in_t, out_tokens=out_t,
+            phase=p.phase, retrieved=p.texts, tier=c.tier,
+            queue_wait_s=c.queue_wait_s, engine_s=c.time_in_engine_s)
+        if self.policy == "eaco":
+            self.gate.update(p.qc, p.arm, cost=cost,
+                             accuracy=1.0 if correct else 0.0, delay=delay)
+        self.logs.append(log)
+        return log
+
+    def drain_engines(self) -> List[StepLog]:
+        """Serve until every submitted query has completed."""
+        if self.sched is None:
+            raise RuntimeError("drain_engines() requires backend='engines'")
+        out: List[StepLog] = []
+        while self.sched.pending() or self.sched.in_flight():
+            before = (self.clock.now(), len(self.logs))
+            out.extend(self.pump_engines())
+            if (self.clock.now(), len(self.logs)) == before:
+                raise RuntimeError(
+                    f"scheduler stalled with {self.sched.pending()} queued "
+                    f"and {self.sched.in_flight()} in flight")
+        return out
+
     def run(self, n_steps: int) -> List[StepLog]:
-        for ev in self.workload.stream(n_steps):
-            self.step(ev)
+        if self.backend != "engines":
+            for ev in self.workload.stream(n_steps):
+                self.step(ev)
+            return self.logs
+        period = self.cfg.arrival_period_s
+        for events in self.workload.bursts(n_steps, clock=self.clock):
+            for ev in events:
+                self.submit_query(ev)
+            # serve until the engines' virtual time reaches the next
+            # arrival tick, then idle the clock forward to it
+            target = self.clock.now() + period
+            while ((self.sched.pending() or self.sched.in_flight())
+                   and self.clock.now() < target):
+                before = self.clock.now()
+                self.pump_engines()
+                if self.clock.now() <= before:
+                    break
+            if self.clock.now() < target:
+                self.clock.advance(target - self.clock.now())
+        self.drain_engines()
         return self.logs
 
     # ------------------------------------------------------------------
@@ -227,6 +472,7 @@ class EACOCluster:
         if not logs:
             return {}
         acc = float(np.mean([l.correct for l in logs]))
+        n_arms = len(self.gate.arms)
         return {
             "n": len(logs),
             "accuracy": acc,
@@ -238,9 +484,10 @@ class EACOCluster:
             "u_d_mean": float(np.mean([l.u_d for l in logs])),
             "hit_rate": float(np.mean([l.hit for l in logs])),
             "arm_fracs": [float(np.mean([l.arm == a for l in logs]))
-                          for a in range(4)],
+                          for a in range(n_arms)],
             "in_tokens_mean": float(np.mean([l.in_tokens for l in logs])),
             "out_tokens_mean": float(np.mean([l.out_tokens for l in logs])),
+            "queue_wait_mean": float(np.mean([l.queue_wait_s for l in logs])),
         }
 
 

@@ -1,9 +1,19 @@
 """Query workload with spatial (per-edge topic affinity) and temporal
-(interest drift) variation — the paper's Table 2 phenomenology."""
+(interest drift) variation — the paper's Table 2 phenomenology — plus
+bursty multi-user arrivals for the engines-backed closed loop.
+
+``stream`` keeps the original one-query-per-step shape (the oracle-backed
+simulator and most benchmarks). ``bursts`` models tiered deployment under
+load: each step draws a Poisson number of concurrent user queries (capped),
+optionally skewed further toward each edge's current hot topic, and stamps
+every event from an injectable clock so arrival times live on the same
+virtual timeline as queue waits and engine service time. The generator
+never advances the clock — whoever owns the timeline (the simulator) does.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -16,6 +26,10 @@ class WorkloadConfig:
     drift_period: float = 250.0     # steps between interest re-draws
     drift_strength: float = 0.6     # 0 = static, 1 = full resample
     concentration: float = 0.5      # Dirichlet alpha (lower = peakier)
+    # bursty multi-user arrivals (engines backend)
+    mean_arrivals: float = 1.0      # Poisson mean queries per step
+    max_arrivals: int = 8           # burst cap per step
+    hot_topic_boost: float = 0.0    # extra mass on each edge's top topic
 
 
 @dataclass
@@ -28,12 +42,12 @@ class QueryEvent:
 class WorkloadGenerator:
     """Each edge has a drifting Dirichlet interest vector over topics."""
 
-    def __init__(self, corpus: Corpus, cfg: WorkloadConfig = WorkloadConfig(),
+    def __init__(self, corpus: Corpus, cfg: Optional[WorkloadConfig] = None,
                  seed: int = 0):
         self.corpus = corpus
-        self.cfg = cfg
+        self.cfg = WorkloadConfig() if cfg is None else cfg
         self.rng = np.random.default_rng(seed)
-        self.edge_ids = [f"edge{i}" for i in range(cfg.n_edges)]
+        self.edge_ids = [f"edge{i}" for i in range(self.cfg.n_edges)]
         self.qa_by_topic: Dict[str, List[QAPair]] = {}
         for qa in corpus.qa:
             self.qa_by_topic.setdefault(qa.topic, []).append(qa)
@@ -61,15 +75,37 @@ class WorkloadGenerator:
         order = np.argsort(-self._interest[edge_id])[:k]
         return [self.topics[int(i)] for i in order]
 
+    def _draw_event(self, t: float) -> QueryEvent:
+        edge = self.edge_ids[int(self.rng.integers(len(self.edge_ids)))]
+        p = self._interest[edge]
+        b = self.cfg.hot_topic_boost
+        if b > 0:
+            p = p.copy()
+            p[int(np.argmax(p))] += b
+            p = p / p.sum()
+        topic = self.topics[int(self.rng.choice(len(self.topics), p=p))]
+        qa_list = self.qa_by_topic[topic]
+        qa = qa_list[int(self.rng.integers(len(qa_list)))]
+        return QueryEvent(float(t), edge, qa)
+
     def stream(self, n_steps: int) -> Iterator[QueryEvent]:
         for t in range(n_steps):
             self._maybe_drift(float(t))
-            edge = self.edge_ids[int(self.rng.integers(len(self.edge_ids)))]
-            p = self._interest[edge]
-            topic = self.topics[int(self.rng.choice(len(self.topics), p=p))]
-            qa_list = self.qa_by_topic[topic]
-            qa = qa_list[int(self.rng.integers(len(qa_list)))]
-            yield QueryEvent(float(t), edge, qa)
+            yield self._draw_event(float(t))
+
+    def bursts(self, n_steps: int,
+               clock: Optional[Callable[[], float]] = None
+               ) -> Iterator[List[QueryEvent]]:
+        """Bursty multi-user arrivals: per step, ``K ~ Poisson(
+        mean_arrivals)`` (capped at ``max_arrivals``) queries arrive
+        together, stamped at ``clock()`` when a clock is injected (step
+        index otherwise). Steps may be empty — real traffic has gaps."""
+        for step in range(n_steps):
+            t = float(clock()) if clock is not None else float(step)
+            self._maybe_drift(t)
+            k = int(min(self.rng.poisson(self.cfg.mean_arrivals),
+                        self.cfg.max_arrivals))
+            yield [self._draw_event(t) for _ in range(k)]
 
 
 __all__ = ["WorkloadGenerator", "WorkloadConfig", "QueryEvent"]

@@ -1,8 +1,10 @@
 """The paper's primary contribution: EACO-RAG core (gating, SafeOBO, GPs,
 adaptive knowledge update, edge-assisted retrieval, cost model)."""
+from repro.core.clock import WALL_CLOCK, VirtualClock
 from repro.core.cost_model import (
     PAPER_CLOUD, PAPER_EDGE, TPU_CLOUD, TPU_EDGE, CostWeights, TierSpec,
-    generation_delay, inference_tflops, time_cost_tflops, total_cost,
+    generation_delay, inference_tflops, modeled_decode_round_s,
+    modeled_prefill_s, time_cost_tflops, total_cost,
 )
 from repro.core.edge_assist import (
     EdgeSelection, edge_assisted_search, query_keywords, select_edge,
@@ -18,9 +20,11 @@ from repro.core.knowledge import (
 from repro.core.safeobo import SafeOBO, SafeOBOConfig
 
 __all__ = [
+    "VirtualClock", "WALL_CLOCK",
     "TierSpec", "CostWeights", "PAPER_EDGE", "PAPER_CLOUD", "TPU_EDGE",
     "TPU_CLOUD", "inference_tflops", "generation_delay", "time_cost_tflops",
-    "total_cost", "EdgeSelection", "edge_assisted_search", "query_keywords",
+    "total_cost", "modeled_prefill_s", "modeled_decode_round_s",
+    "EdgeSelection", "edge_assisted_search", "query_keywords",
     "select_edge", "Arm", "PAPER_ARMS", "QueryContext", "context_features",
     "CONTEXT_DIM", "CollaborativeGate", "Decision", "GPHypers", "GPState",
     "gp_add", "gp_init", "gp_posterior", "SafeOBO", "SafeOBOConfig",

@@ -1,0 +1,47 @@
+"""Virtual clock shared by the workload generator, the tier scheduler and
+the cluster simulator.
+
+The serving stack times everything through an injectable ``clock`` — any
+zero-argument callable returning seconds as a float. Live deployments pass
+``time.perf_counter`` (the default everywhere); simulations pass a
+:class:`VirtualClock` so arrivals, queue waits, engine service time and
+network transit compose on ONE logical timeline instead of mixing event
+time with wall time (the bug this class exists to fix: a scheduler fed
+logical ``now=`` values must never subtract them from ``perf_counter``).
+
+A :class:`VirtualClock` only moves when someone calls :meth:`advance` —
+the simulator is the sole driver, advancing by arrival gaps and by the
+(modeled or measured) engine service time per scheduling round.
+"""
+from __future__ import annotations
+
+import time
+
+
+class VirtualClock:
+    """Monotonic logical clock. Callable, so it drops in anywhere a
+    ``time.perf_counter``-style clock is expected."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self._t += float(dt)
+        return self._t
+
+    def __call__(self) -> float:
+        return self._t
+
+    def __repr__(self) -> str:
+        return f"VirtualClock(t={self._t:.6f})"
+
+
+#: The wall clock every component defaults to outside simulations.
+WALL_CLOCK = time.perf_counter
+
+__all__ = ["VirtualClock", "WALL_CLOCK"]

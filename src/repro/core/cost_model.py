@@ -83,6 +83,20 @@ def time_cost_tflops(tier: TierSpec, delay_s: float) -> float:
     return delay_s * tier.peak_tflops
 
 
+def modeled_prefill_s(tier: TierSpec, tokens: float) -> float:
+    """Virtual-clock service time for prefilling ``tokens`` prompt tokens
+    on this tier (used when real engines run on a logical timeline: the
+    engine supplies the true token counts, the tier spec the rate)."""
+    return max(float(tokens), 0.0) / tier.prefill_tokens_per_s
+
+
+def modeled_decode_round_s(tier: TierSpec) -> float:
+    """Virtual-clock duration of one fused decode step on this tier (every
+    resident request emits one token per step, so a round costs one
+    token-time regardless of batch occupancy)."""
+    return 1.0 / tier.tokens_per_s
+
+
 @dataclass(frozen=True)
 class CostWeights:
     """delta2 default 0.1 reproduces the paper's Table 4 arithmetic
@@ -108,5 +122,6 @@ __all__ = [
     "TierSpec", "CostWeights", "GPU_PEAK_TFLOPS_FP64", "TPU_PEAK_TFLOPS_BF16",
     "PAPER_EDGE", "PAPER_CLOUD", "TPU_EDGE", "TPU_CLOUD",
     "inference_tflops", "generation_delay", "time_cost_tflops", "total_cost",
+    "modeled_prefill_s", "modeled_decode_round_s",
     "TABLE1_TOKENS",
 ]

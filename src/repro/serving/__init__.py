@@ -1,5 +1,6 @@
 from repro.serving.engine import (
-    EngineCompletion, GenStats, Request, ServingEngine, make_edge_engine,
+    EngineCompletion, EngineError, GenStats, Request, ServingEngine,
+    make_cloud_engine, make_edge_engine,
 )
 from repro.serving.paging import (
     PageAllocator, PagingError, PrefixCache, pages_needed,
@@ -7,5 +8,6 @@ from repro.serving.paging import (
 from repro.serving.scheduler import Completion, TierScheduler
 
 __all__ = ["ServingEngine", "Request", "GenStats", "EngineCompletion",
-           "make_edge_engine", "TierScheduler", "Completion",
+           "EngineError", "make_edge_engine", "make_cloud_engine",
+           "TierScheduler", "Completion",
            "PageAllocator", "PrefixCache", "PagingError", "pages_needed"]

@@ -93,6 +93,14 @@ from repro.serving.paging import (
 )
 
 
+class EngineError(RuntimeError):
+    """Caller-facing serving-engine invariant violation (vocab coverage,
+    page-size divisibility, batch bounds, busy pool). A real exception —
+    unlike a bare ``assert`` — survives ``python -O``, where a silently
+    admitted bad config would corrupt KV state long after the cause
+    (mirrors :class:`~repro.serving.paging.PagingError`)."""
+
+
 @dataclass
 class GenStats:
     prompt_tokens: int
@@ -178,13 +186,17 @@ class ServingEngine:
         self.max_seq = max_seq
         self.max_batch = max_batch
         self.tok = ByteTokenizer()
-        assert cfg.vocab >= self.tok.vocab_size, "vocab must cover bytes"
+        if cfg.vocab < self.tok.vocab_size:
+            raise EngineError(
+                f"vocab {cfg.vocab} cannot cover the byte tokenizer's "
+                f"{self.tok.vocab_size} ids")
         self.model = build_model(cfg, max_seq=max_seq)
         self.params = params if params is not None else self.model.init(
             jax.random.PRNGKey(seed))
         self._key = jax.random.PRNGKey(seed + 1)
 
-        assert kv_layout in ("auto", "paged", "contiguous"), kv_layout
+        if kv_layout not in ("auto", "paged", "contiguous"):
+            raise EngineError(f"unknown kv_layout {kv_layout!r}")
         if kv_layout == "auto":
             kv_layout = ("paged" if self.model.supports_paged_cache
                          else "contiguous")
@@ -195,14 +207,21 @@ class ServingEngine:
         self.kv_layout = kv_layout
 
         if kv_layout == "paged":
-            assert page_size % 8 == 0, "page_size must keep the 8-row layout"
-            assert max_seq % page_size == 0, (max_seq, page_size)
+            if page_size % 8 != 0:
+                raise EngineError(
+                    f"page_size {page_size} must keep the 8-row layout")
+            if max_seq % page_size != 0:
+                raise EngineError(
+                    f"max_seq {max_seq} not divisible by page_size "
+                    f"{page_size}")
             self.page_size = page_size
             self.pages_per_slot = max_seq // page_size
             self.num_pages = (max_batch * self.pages_per_slot
                               if num_pages is None else num_pages)
-            assert self.num_pages >= self.pages_per_slot, \
-                "pool must fit at least one worst-case request"
+            if self.num_pages < self.pages_per_slot:
+                raise EngineError(
+                    f"page pool of {self.num_pages} cannot fit one "
+                    f"worst-case request ({self.pages_per_slot} pages)")
             # ---- page arena (+1: trash page 0) + host page state ----------
             arena_defs = self.model.paged_cache_defs(self.num_pages + 1,
                                                      page_size)
@@ -238,6 +257,8 @@ class ServingEngine:
         self.peak_active = 0      # high-water mark of resident requests
         self.prefill_s = 0.0      # cumulative engine-lifetime timers
         self.decode_s = 0.0
+        self.prefill_tokens = 0   # suffix tokens actually prefilled
+        self.decode_rounds = 0    # fused decode steps run with active slots
         self.prefix_hits = 0      # engine-lifetime prefix-cache counters
         self.prefix_misses = 0
         self.prefix_tokens_shared = 0
@@ -488,6 +509,7 @@ class ServingEngine:
                 jnp.int32(len(suffix)), jnp.int32(prefix_len),
                 jnp.asarray(row))
             self._page_tables[slot] = row
+            self.prefill_tokens += len(suffix)
             page_ids = row[:plan.total_pages].copy()
             if self._prefix is not None:
                 self._prefix.insert(enc, row)
@@ -503,6 +525,7 @@ class ServingEngine:
             logits, lane = self._prefill(self.params, jnp.asarray(tokens),
                                          jnp.asarray(lengths))
             self._cache = self._insert(self._cache, lane, np.int32(slot))
+            self.prefill_tokens += L
         self._key, sub = jax.random.split(self._key)
         first = self._sample(logits,
                              jnp.asarray([request.temperature], jnp.float32),
@@ -543,6 +566,7 @@ class ServingEngine:
                 self._free(i)
 
         if self.has_active:
+            self.decode_rounds += 1
             t0 = time.perf_counter()
             args = (self.params, self._cache,
                     jnp.asarray(self._tokens)[:, None],
@@ -593,12 +617,16 @@ class ServingEngine:
         benchmarking and equivalence testing against the continuous path.
         With a deliberately small page pool the batch may not fit at once;
         size ``num_pages`` for the worst case when using this path."""
-        assert 0 < len(requests) <= self.max_batch
+        if not 0 < len(requests) <= self.max_batch:
+            raise EngineError(
+                f"static batch of {len(requests)} requests exceeds the "
+                f"bounds (1..{self.max_batch})")
         return self._pump_all(requests, continuous=False)
 
     def _pump_all(self, requests: Sequence[Request], *, continuous: bool
                   ) -> Tuple[List[str], GenStats]:
-        assert not self.has_active, "engine already has resident requests"
+        if self.has_active:
+            raise EngineError("engine already has resident requests")
         p0, d0 = self.prefill_s, self.decode_s
         t0 = self.trace_counts["prefill"]
         h0, m0, s0 = (self.prefix_hits, self.prefix_misses,
@@ -635,7 +663,8 @@ class ServingEngine:
         buckets are compiled too because prefix-cache hits shrink the
         prefilled suffix below the prompt length. Lets benchmarks separate
         compile from serve time."""
-        assert not self.has_active
+        if self.has_active:
+            raise EngineError("cannot warm up a busy engine")
         cap = max((self._pad_bucket(max(n, 1)) for n in prompt_lens),
                   default=8)
         buckets = [b for b in self.pad_buckets if b <= cap]
@@ -682,5 +711,15 @@ def make_edge_engine(*, max_seq: int = 512, max_batch: int = 8,
                          **kw)
 
 
+def make_cloud_engine(*, max_seq: int = 512, max_batch: int = 8,
+                      seed: int = 0, **kw) -> ServingEngine:
+    """Cloud-tier engine: reduced qwen2-72b family (the paper's large-LLM
+    arm), byte-vocab capable. Extra keyword args pass through."""
+    from repro.configs import get_config
+    cfg = get_config("qwen2-72b", reduced=True)
+    return ServingEngine(cfg, max_seq=max_seq, max_batch=max_batch, seed=seed,
+                         **kw)
+
+
 __all__ = ["ServingEngine", "Request", "GenStats", "EngineCompletion",
-           "make_edge_engine"]
+           "EngineError", "make_edge_engine", "make_cloud_engine"]

@@ -4,9 +4,19 @@ Per-tier deadline heaps (edge engines + cloud engine) feed the engines'
 slot pools. Instead of the old "pop one rigid batch, block on it" loop,
 ``pump()`` runs one scheduling round: for every tier it admits queued
 requests (oldest deadline first) into whatever slots just freed, then
-advances that tier's engine by one fused decode step, harvesting
+advances that tier's engines by one fused decode step each, harvesting
 per-request completions mid-stream. The gate decides the tier; the
 scheduler keeps the lanes full.
+
+A tier may be backed by a POOL of engines (``{"edge": [e0, e1], "cloud":
+e2}``): the tier shares one deadline queue and the head request is admitted
+into the first pool member with a free slot (and, paged, enough pages).
+
+All timings run on an injectable ``clock`` (any zero-arg callable returning
+seconds; default ``time.perf_counter``). ``submit(now=...)`` and
+``pump(now=...)`` override the clock per call, so a simulator driving the
+scheduler with logical event time gets exact logical queue waits and
+service times — never a mix of event time and wall time.
 """
 from __future__ import annotations
 
@@ -14,7 +24,7 @@ import heapq
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.serving.engine import Request, ServingEngine
 
@@ -26,6 +36,7 @@ class _Item:
     request: Request = field(compare=False)
     tier: str = field(compare=False, default="edge")
     enqueued_at: float = field(compare=False, default=0.0)
+    admitted_at: float = field(compare=False, default=0.0)
     queue_wait_s: float = field(compare=False, default=0.0)
 
 
@@ -34,26 +45,38 @@ class Completion:
     request: Request
     text: str
     tier: str
-    queue_wait_s: float          # submit -> slot admission
-    time_in_engine_s: float      # admission -> finish
+    queue_wait_s: float          # submit -> slot admission (scheduler clock)
+    time_in_engine_s: float      # admission -> finish (scheduler clock)
     prompt_tokens: int = 0
     new_tokens: int = 0
+    engine_index: int = 0        # which pool member served it
+    engine_wall_s: float = 0.0   # engine-measured wall time (admit -> finish)
 
 
 class TierScheduler:
-    """Deadline-ordered continuous scheduler over named engine tiers."""
+    """Deadline-ordered continuous scheduler over named engine-pool tiers."""
 
-    def __init__(self, engines: Dict[str, ServingEngine]):
+    def __init__(self, engines: Dict[str, Union[ServingEngine,
+                                                Sequence[ServingEngine]]],
+                 clock: Optional[Callable[[], float]] = None):
+        self.pools: Dict[str, List[ServingEngine]] = {}
+        for tier, pool in engines.items():
+            members = list(pool) if isinstance(pool, (list, tuple)) else [pool]
+            if not members:
+                raise ValueError(f"tier {tier!r} has an empty engine pool")
+            self.pools[tier] = members
         self.engines = engines
-        self._queues: Dict[str, List[_Item]] = {t: [] for t in engines}
-        self._inflight: Dict[tuple, _Item] = {}
+        self.clock: Callable[[], float] = (time.perf_counter
+                                           if clock is None else clock)
+        self._queues: Dict[str, List[_Item]] = {t: [] for t in self.pools}
+        self._inflight: Dict[Tuple[str, int, int], _Item] = {}
         self._seq = itertools.count()
 
     def submit(self, request: Request, tier: str,
                deadline_s: float = 1e9, now: Optional[float] = None) -> None:
         if tier not in self._queues:
             raise KeyError(f"unknown tier {tier!r}")
-        now = time.perf_counter() if now is None else now
+        now = self.clock() if now is None else now
         heapq.heappush(self._queues[tier],
                        _Item(deadline_s, next(self._seq), request, tier, now))
 
@@ -66,38 +89,52 @@ class TierScheduler:
     def in_flight(self, tier: Optional[str] = None) -> int:
         """Requests resident in an engine slot, still decoding."""
         if tier:
-            return sum(t == tier for t, _ in self._inflight)
+            return sum(t == tier for t, _, _ in self._inflight)
         return len(self._inflight)
 
-    def pump(self) -> List[Completion]:
+    def pump(self, now: Optional[float] = None) -> List[Completion]:
         """One scheduling round across every tier: fill free slots from the
         deadline heap, advance each engine one decode step, and return the
         requests that finished this round.
 
-        Admission asks the engine via ``can_admit`` — a free slot AND, for a
-        paged KV-cache, enough free pages for the request's prompt + decode
-        budget. Admission stays strictly deadline-ordered: if the head
-        request doesn't fit, later (larger-deadline) requests wait behind it
-        rather than jumping the queue, so a big request can't be starved by
-        a stream of small ones."""
+        Admission asks the engines via ``can_admit`` — a free slot AND, for
+        a paged KV-cache, enough free pages for the request's prompt +
+        decode budget. Admission stays strictly deadline-ordered: if the
+        head request doesn't fit on ANY pool member, later (larger-deadline)
+        requests wait behind it rather than jumping the queue, so a big
+        request can't be starved by a stream of small ones.
+
+        ``now`` pins the whole round to one logical timestamp (simulators);
+        without it the injected clock is read as events happen, so wall-mode
+        completions still include the round's measured compute."""
+        t_round = self.clock() if now is None else now
         out: List[Completion] = []
-        for tier, eng in self.engines.items():
+        for tier, pool in self.pools.items():
             q = self._queues[tier]
-            while q and eng.can_admit(q[0].request):
+            while q:
+                eng_i = next((i for i, e in enumerate(pool)
+                              if e.can_admit(q[0].request)), None)
+                if eng_i is None:
+                    break
                 item = heapq.heappop(q)
-                item.queue_wait_s = time.perf_counter() - item.enqueued_at
-                rid = eng.admit(item.request)
-                self._inflight[(tier, rid)] = item
-            if not eng.has_active:
-                continue
-            for ec in eng.step():
-                item = self._inflight.pop((tier, ec.req_id))
-                out.append(Completion(
-                    request=item.request, text=ec.text, tier=tier,
-                    queue_wait_s=max(item.queue_wait_s, 0.0),
-                    time_in_engine_s=ec.time_in_engine_s,
-                    prompt_tokens=ec.prompt_tokens,
-                    new_tokens=ec.new_tokens))
+                item.queue_wait_s = max(t_round - item.enqueued_at, 0.0)
+                item.admitted_at = t_round
+                rid = pool[eng_i].admit(item.request)
+                self._inflight[(tier, eng_i, rid)] = item
+            for eng_i, eng in enumerate(pool):
+                if not eng.has_active:
+                    continue
+                for ec in eng.step():
+                    item = self._inflight.pop((tier, eng_i, ec.req_id))
+                    t_done = self.clock() if now is None else now
+                    out.append(Completion(
+                        request=item.request, text=ec.text, tier=tier,
+                        queue_wait_s=item.queue_wait_s,
+                        time_in_engine_s=max(t_done - item.admitted_at, 0.0),
+                        prompt_tokens=ec.prompt_tokens,
+                        new_tokens=ec.new_tokens,
+                        engine_index=eng_i,
+                        engine_wall_s=ec.time_in_engine_s))
         return out
 
     # one pump used to serve a whole batch; keep the name as an alias for

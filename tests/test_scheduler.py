@@ -1,6 +1,7 @@
 """Serving scheduler + continuous-batching engine behaviour."""
 import pytest
 
+from repro.core.clock import VirtualClock
 from repro.serving.engine import Request, make_edge_engine
 from repro.serving.scheduler import TierScheduler
 
@@ -109,6 +110,76 @@ def test_completion_accounting(engine, sched):
         assert c.prompt_tokens == len(engine.tok.encode(r.prompt))
         assert 0 < c.new_tokens <= r.max_new_tokens
         assert len(engine.tok.encode(c.text, bos=False)) == c.new_tokens
+
+
+# ---------------------------------------------------------------------------
+# Logical-clock timing (the old wall/logical clock-mixing bug: submit took a
+# logical now= but pump always subtracted it from time.perf_counter)
+# ---------------------------------------------------------------------------
+
+def test_queue_wait_exact_under_injected_clock(engine):
+    """Queue waits are EXACT logical-time differences when a virtual clock
+    drives the scheduler — no wall-clock leakage anywhere."""
+    clock = VirtualClock()
+    sched = TierScheduler({"edge": engine}, clock=clock)
+    sched.submit(Request("hello", max_new_tokens=2), "edge")  # enqueue @ 0.0
+    clock.advance(3.5)
+    done = list(sched.pump(now=clock.now()))       # admitted @ exactly 3.5
+    rounds = 1
+    while not done:
+        clock.advance(0.25)
+        done = sched.pump(now=clock.now())
+        rounds += 1
+    c = done[0]
+    assert c.queue_wait_s == 3.5                   # exact, not approximate
+    assert c.time_in_engine_s == 0.25 * (rounds - 1)
+    assert c.engine_wall_s > 0.0                   # real compute happened
+
+
+def test_pump_now_overrides_per_round(engine):
+    """submit(now=...) + pump(now=...) pin every timing to caller time even
+    while the scheduler's own clock default would disagree."""
+    sched = TierScheduler({"edge": engine})        # default wall clock
+    sched.submit(Request("hi", max_new_tokens=1), "edge", now=100.0)
+    t, done = 107.0, []
+    while not done:
+        done = sched.pump(now=t)
+        t += 1.0
+    assert done[0].queue_wait_s == 7.0
+
+
+def test_scheduler_clock_is_used_without_now(engine):
+    """With an injected clock, calls WITHOUT now= read that clock — never
+    the wall clock."""
+    clock = VirtualClock(start=50.0)
+    sched = TierScheduler({"edge": engine}, clock=clock)
+    sched.submit(Request("yo", max_new_tokens=1), "edge")
+    clock.advance(2.0)
+    done = []
+    while not done:
+        done = sched.pump()
+    assert done[0].queue_wait_s == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Engine pools behind one tier
+# ---------------------------------------------------------------------------
+
+def test_tier_pool_spreads_load():
+    """A tier backed by a pool of engines admits the queue head into ANY
+    member with capacity: two max_batch=1 engines serve two requests in the
+    same round."""
+    pool = [make_edge_engine(max_seq=64, max_batch=1, seed=i)
+            for i in range(2)]
+    sched = TierScheduler({"edge": pool})
+    for i in range(4):
+        sched.submit(Request(f"req {i}", max_new_tokens=2), "edge")
+    first = sched.pump()
+    assert sched.in_flight("edge") + len(first) == 2   # both members busy
+    done = list(first) + sched.drain()
+    assert len(done) == 4
+    assert {c.engine_index for c in done} == {0, 1}
+    assert all(c.tier == "edge" for c in done)
 
 
 # ---------------------------------------------------------------------------
