@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src:.
 
 .PHONY: test test-opt bench-smoke bench-serving bench-serving-smoke \
-	bench-kernels bench-cluster-smoke
+	bench-kernels bench-cluster-smoke bench-overload-smoke bench-overload
 
 test:
 	$(PY) -m pytest -x -q
@@ -11,11 +11,14 @@ test:
 # the guard-path tests under python -O: bare asserts are stripped there, so
 # this lane proves the engine/scheduler guards are real exceptions
 test-opt:
-	$(PY) -O -m pytest tests/test_scheduler.py tests/test_cluster_engines.py -q
+	$(PY) -O -m pytest tests/test_scheduler.py tests/test_cluster_engines.py \
+		tests/test_preemption.py -q
 
 # tiny-size benchmark smoke: serving (static vs continuous + paged vs
-# contiguous + prefix-cache scenarios) + kernels + closed-loop cluster
-bench-smoke: bench-kernels bench-serving-smoke bench-cluster-smoke
+# contiguous + prefix-cache scenarios) + kernels + closed-loop cluster +
+# overload robustness
+bench-smoke: bench-kernels bench-serving-smoke bench-cluster-smoke \
+	bench-overload-smoke
 
 # serving benchmark smoke (tiny config, prefix scenario included); leaves a
 # JSON artifact at results/benchmarks/serving_bench.json for CI to upload
@@ -35,7 +38,20 @@ bench-kernels:
 
 # closed-loop cluster smoke: eaco + the four fixed arms served end-to-end
 # through shared real engine pools on one virtual clock; checks every query
-# completes, zero decode retraces per engine, sane Table-4 cost structure.
+# completes, request conservation (submitted == completed + shed + failed),
+# zero decode retraces per engine, sane Table-4 cost structure.
 # Leaves results/benchmarks/cluster_bench.json for CI to upload
 bench-cluster-smoke:
 	$(PY) benchmarks/cluster_bench.py --smoke --check
+
+# overload robustness smoke: 1x/2x/5x oversubscription + no-preemption
+# baseline + fault injection on one edge engine (virtual clock, modeled
+# service times); gates on zero wedges, request conservation, token-identical
+# preempt/resume, and interactive p95 at 2x meeting the SLO and beating the
+# baseline. Leaves results/benchmarks/overload_bench.json for CI to upload
+bench-overload-smoke:
+	$(PY) benchmarks/overload_bench.py --smoke --check
+
+# full-size overload benchmark with the same gates
+bench-overload:
+	$(PY) benchmarks/overload_bench.py --check

@@ -129,6 +129,17 @@ def _check(rows, by_policy):
         if sim.sched.pending() or sim.sched.in_flight() or sim._pending:
             ok = False
             msgs.append(f"{policy}: left queries unserved")
+        # request conservation: everything submitted reached a typed
+        # terminal outcome (completed, shed, or failed) — nothing vanished
+        c = sim.counters
+        if not sim.conservation_ok() or c["submitted"] != (
+                c["completed"] + c["shed"] + c["failed"]):
+            ok = False
+            msgs.append(f"{policy}: conservation violated: {c}")
+        if not sim.sched.conservation_ok():
+            ok = False
+            msgs.append(f"{policy}: scheduler conservation violated: "
+                        f"{sim.sched.counters}")
         if m["delay_mean"] <= 0 or m["cost_mean"] <= 0:
             ok = False
             msgs.append(f"{policy}: non-positive delay/cost")
@@ -155,8 +166,9 @@ def _check(rows, by_policy):
         sys.exit(1)
     s = next(r for r in rows if r["name"] == "summary")
     print(f"CLUSTER CHECK OK: all policies served end-to-end through real "
-          f"engine pools on one virtual clock, zero decode retraces per "
-          f"engine, eaco cost reduction vs 72B "
+          f"engine pools on one virtual clock, request conservation holds "
+          f"(submitted == completed + shed + failed), zero decode retraces "
+          f"per engine, eaco cost reduction vs 72B "
           f"{s['eaco_cost_reduction_vs_72b_pct']}%")
 
 

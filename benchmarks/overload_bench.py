@@ -1,0 +1,262 @@
+"""Overload benchmark: SLO-aware preemption / shedding under 1x-5x load.
+
+A single paged edge engine (reduced qwen2-0.5b) runs on a virtual clock
+with PAPER_EDGE modeled service times — the same deterministic timeline the
+cluster simulator uses — while a deterministic arrival process offers a
+mixed stream at a chosen multiple of the engine's token capacity:
+
+* ``interactive`` requests: short prompts, 4-8 new tokens, tight deadline
+  (must finish within ``INTERACTIVE_SLO_S`` of arrival);
+* ``batch`` requests: longer prompts, 24-48 new tokens, loose deadline.
+
+Cases:
+
+1. ``1x`` / ``2x`` / ``5x`` — preemption + overdue shedding ON. At 2x+
+   every interactive arrival that finds the slot pool full of batch work
+   preempts the worst resident (which later RESUMES via the prefix cache).
+2. ``2x-nopreempt`` — identical 2x stream with preemption OFF: interactive
+   requests wait for a slot behind resident batch decodes. The interactive
+   p95 gap vs case 2x isolates what preemption buys.
+3. ``2x-faults`` — 2x stream plus a periodically stalling engine and a
+   stuck-resident timeout: residents caught in a long stall are reclaimed
+   as typed ``Shed("timeout")`` outcomes and their pages come back.
+
+``--check`` gates (the robustness contract):
+  * zero wedges — every case drains; no scheduler/drain errors;
+  * conservation — submitted == completed + shed (typed) in every case;
+  * token-identical service — EVERY completed text equals the same
+    request's uncontended reference output (greedy, same seed), including
+    requests that were preempted and resumed mid-decode (>= 1 such must
+    occur at 2x, else the bench isn't testing anything);
+  * interactive p95 at 2x meets the SLO and beats the no-preemption
+    baseline.
+
+Usage:  PYTHONPATH=src:. python benchmarks/overload_bench.py \
+            [--smoke] [--check] [--seed N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.clock import VirtualClock
+from repro.core.cost_model import (
+    PAPER_EDGE, modeled_decode_round_s, modeled_prefill_s,
+)
+from repro.serving import Request, TierScheduler, make_edge_engine
+
+MAX_SEQ = 128
+MAX_BATCH = 4
+INTERACTIVE_SLO_S = 2.0     # deadline slack for interactive arrivals
+BATCH_SLO_S = 60.0          # loose deadline for batch arrivals
+WEDGE_IDLE_S = 30.0         # virtual idle time with zero progress = wedge
+
+
+def overload_workload(n: int, seed: int):
+    """Deterministic mixed stream: ~half interactive, half batch. Returns
+    a list of (slo, prompt, max_new) specs; Request objects are built
+    fresh per case (engine plan memos key on request identity)."""
+    rng = np.random.default_rng(seed)
+    specs = []
+    for k in range(n):
+        if k % 2 == 0:
+            plen = int(rng.integers(12, 40))
+            new = int(rng.integers(4, 9))
+            slo = "interactive"
+        else:
+            plen = int(rng.integers(30, 70))
+            new = int(rng.integers(24, 49))
+            slo = "batch"
+        prompt = f"q{k} " + "".join(rng.choice(list("abcdefgh "), plen))
+        specs.append((slo, prompt, new))
+    return specs
+
+
+def make_requests(specs):
+    return [Request(prompt, max_new_tokens=new, slo=slo)
+            for slo, prompt, new in specs]
+
+
+def arrival_times(specs, load: float):
+    """Deterministic arrivals at ``load`` times the engine's modeled token
+    capacity (MAX_BATCH slots each emitting one token per decode round)."""
+    mean_new = float(np.mean([new for _, _, new in specs]))
+    cap_rps = MAX_BATCH * PAPER_EDGE.tokens_per_s / mean_new
+    dt = 1.0 / (load * cap_rps)
+    return [k * dt for k in range(len(specs))]
+
+
+def run_case(eng, specs, load: float, *, preempt: bool, faults=None,
+             request_timeout_s=None):
+    """Drive one overload case on the virtual clock; modeled service time
+    is derived from the engine's true prefill/decode work, exactly as the
+    cluster simulator does. Returns per-case stats."""
+    clock = VirtualClock()
+    sched = TierScheduler({"edge": eng}, clock=clock, preempt=preempt,
+                          shed_overdue=True,
+                          request_timeout_s=request_timeout_s)
+    reqs = make_requests(specs)
+    arrivals = list(zip(arrival_times(specs, load), reqs))
+    slack = {"interactive": INTERACTIVE_SLO_S, "batch": BATCH_SLO_S}
+    index = {id(r): k for k, r in enumerate(reqs)}
+
+    completions, idle_since = [], None
+    while arrivals or sched.pending() or sched.in_flight():
+        now = clock.now()
+        while arrivals and arrivals[0][0] <= now:
+            t_arr, r = arrivals.pop(0)
+            sched.submit(r, "edge", deadline_s=t_arr + slack[r.slo], now=now)
+        stalled = None
+        if faults is not None:
+            def stalled(tier, i, _now=now):        # noqa: E731
+                return faults.stalled(tier, i, _now, 1)
+        p0, d0 = eng.prefill_tokens, eng.decode_rounds
+        before = (sched.pending(), sched.in_flight(),
+                  tuple(sched.counters.values()))
+        comps = sched.pump(now=now, stalled=stalled)
+        completions.extend(comps)
+        dt = (modeled_prefill_s(PAPER_EDGE, eng.prefill_tokens - p0)
+              + (eng.decode_rounds - d0) * modeled_decode_round_s(PAPER_EDGE))
+        after = (sched.pending(), sched.in_flight(),
+                 tuple(sched.counters.values()))
+        if dt > 0:
+            clock.advance(dt)
+            idle_since = None
+            continue
+        if after != before:
+            idle_since = None
+            continue
+        # nothing moved: jump to the next arrival, or tick through a
+        # stall window; a long idle plateau with work outstanding = wedge
+        idle_since = now if idle_since is None else idle_since
+        if now - idle_since > WEDGE_IDLE_S:
+            raise RuntimeError(
+                f"overload case wedged at t={now:.2f}: "
+                f"{sched.pending()} queued, {sched.in_flight()} resident")
+        clock.advance(max(arrivals[0][0] - now, 0.05) if arrivals else 0.05)
+
+    def lat(c):
+        return c.queue_wait_s + c.time_in_engine_s
+
+    def p95(xs):
+        return float(np.percentile(xs, 95)) if xs else float("nan")
+
+    inter = [c for c in completions if c.slo == "interactive"]
+    sheds = sched.pop_sheds()
+    return {
+        "completions": completions,
+        "index": index,
+        "conservation": sched.conservation_ok(),
+        "counters": dict(sched.counters),
+        "shed_reasons": sorted({s.reason for s in sheds}),
+        "preempted_completed": sum(c.preemptions > 0 for c in completions),
+        "interactive_p95_s": p95([lat(c) for c in inter]),
+        "interactive_done": len(inter),
+        "batch_done": len(completions) - len(inter),
+        "makespan_s": clock.now(),
+    }
+
+
+def run(quick: bool = False, check: bool = False, seed: int = 0):
+    n = 36 if quick else 120
+    specs = overload_workload(n, seed)
+    eng = make_edge_engine(max_seq=MAX_SEQ, max_batch=MAX_BATCH, seed=0)
+    eng.warmup(len(eng.tok.encode(p)) for _, p, _ in specs)
+
+    # uncontended greedy reference — the token-identity yardstick
+    ref_texts, _ = eng.generate(make_requests(specs))
+    eng.invalidate_prefix_cache()
+
+    from repro.cluster.faults import FaultConfig, FaultInjector
+    cases = [
+        ("1x", dict(load=1.0, preempt=True)),
+        ("2x", dict(load=2.0, preempt=True)),
+        ("5x", dict(load=5.0, preempt=True)),
+        ("2x-nopreempt", dict(load=2.0, preempt=False)),
+        # one long stall landing once work is resident: its victims exceed
+        # the 1.0s no-progress timeout and come back as typed sheds
+        ("2x-faults", dict(load=2.0, preempt=True, request_timeout_s=1.0,
+                           faults=FaultInjector(FaultConfig(
+                               stall_period_s=30.0, stall_duration_s=1.3,
+                               stall_start_s=1.6)))),
+    ]
+    rows, results = [], {}
+    for name, kw in cases:
+        res = run_case(eng, specs, **kw)
+        eng.invalidate_prefix_cache()
+        mismatched = sum(
+            c.text != ref_texts[res["index"][id(c.request)]]
+            for c in res["completions"])
+        results[name] = dict(res, mismatched=mismatched)
+        c = res["counters"]
+        rows.append({
+            "name": name,
+            "submitted": c["submitted"],
+            "completed": c["completed"],
+            "shed": c["shed"] + c["overload_shed"],
+            "timed_out": c["timed_out"],
+            "preempted": c["preempted"],
+            "resumed": c["resumed"],
+            "preempted_completed": res["preempted_completed"],
+            "mismatched_texts": mismatched,
+            "conservation_ok": res["conservation"],
+            "interactive_p95_s": round(res["interactive_p95_s"], 3),
+            "interactive_done": res["interactive_done"],
+            "batch_done": res["batch_done"],
+            "makespan_virtual_s": round(res["makespan_s"], 2),
+        })
+
+    p95_pre = results["2x"]["interactive_p95_s"]
+    p95_base = results["2x-nopreempt"]["interactive_p95_s"]
+    rows.append({
+        "name": "summary",
+        "interactive_p95_2x_preempt_s": round(p95_pre, 3),
+        "interactive_p95_2x_baseline_s": round(p95_base, 3),
+        "p95_improvement": round(p95_base / max(p95_pre, 1e-9), 2),
+        "slo_s": INTERACTIVE_SLO_S,
+    })
+    emit(rows, "overload_bench")
+
+    if check:
+        ok = True
+
+        def gate(cond, msg):
+            nonlocal ok
+            print(f"  [{'PASS' if cond else 'FAIL'}] {msg}")
+            ok = ok and bool(cond)
+
+        for name, res in results.items():
+            gate(res["conservation"], f"{name}: request conservation")
+            gate(res["mismatched"] == 0,
+                 f"{name}: all completed texts token-identical to reference")
+        gate(results["2x"]["preempted_completed"] >= 1,
+             "2x: >=1 preempted request completed (resume path exercised)")
+        gate(results["2x-faults"]["counters"]["timed_out"] >= 1,
+             "2x-faults: stalled residents timed out (typed)")
+        gate(p95_pre <= INTERACTIVE_SLO_S,
+             f"2x: interactive p95 {p95_pre:.3f}s within "
+             f"{INTERACTIVE_SLO_S}s SLO")
+        gate(p95_pre < p95_base,
+             f"2x: preemption beats baseline p95 "
+             f"({p95_pre:.3f}s < {p95_base:.3f}s)")
+        print("overload_bench check:", "PASS" if ok else "FAIL")
+        return 0 if ok else 1
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless the robustness gates pass")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args(argv)
+    return run(quick=a.smoke, check=a.check, seed=a.seed)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

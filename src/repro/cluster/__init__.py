@@ -1,3 +1,4 @@
+from repro.cluster.faults import FaultConfig, FaultInjector
 from repro.cluster.network import NetworkConfig, NetworkModel
 from repro.cluster.oracle import AccuracyOracle, ArmQuality, DEFAULT_QUALITY
 from repro.cluster.simulator import EACOCluster, SimConfig, StepLog
@@ -7,4 +8,5 @@ __all__ = [
     "NetworkModel", "NetworkConfig", "AccuracyOracle", "ArmQuality",
     "DEFAULT_QUALITY", "EACOCluster", "SimConfig", "StepLog",
     "WorkloadGenerator", "WorkloadConfig", "QueryEvent",
+    "FaultInjector", "FaultConfig",
 ]

@@ -1,0 +1,103 @@
+"""Deterministic fault injection on the virtual clock.
+
+Overload robustness is only proven if the loop survives the ugly cases:
+an engine that stops making progress, a network path whose latency spikes,
+a completion that never reaches the caller. :class:`FaultInjector` models
+all three as PURE functions of virtual time (plus one seeded RNG for
+completion drops), so a faulted simulation is exactly reproducible under a
+fixed seed — the same property the rest of the cluster keeps
+(``engine_time="modeled"``).
+
+* **Engine stalls** — periodic windows: within each ``stall_period_s``
+  cycle, one pool member of each listed tier is frozen for
+  ``stall_duration_s`` (the victim rotates through the pool across
+  cycles). The scheduler's ``stalled`` hook skips the frozen engine for
+  admission and stepping; its residents stop accruing progress and — with
+  ``request_timeout_s`` set — are timed out, freeing slot and pages.
+* **Network delay spikes** — within each ``net_spike_period_s`` cycle the
+  first ``net_spike_duration_s`` adds ``net_spike_extra_s`` to the transit
+  delay of any completion finalized in the window (a congested uplink).
+* **Dropped completions** — each harvested completion is lost with
+  probability ``drop_completion_p`` (seeded RNG, one draw per completion):
+  the caller never sees the result and must treat the request like a shed
+  (retry / fail over), exercising the same recovery path as a lost RPC.
+
+The injector never touches engine internals — a "stalled" engine's KV and
+slot state stay intact, which is exactly what makes timeout-preemption
+(host-side bookkeeping) the right recovery tool.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass
+class FaultConfig:
+    stall_period_s: float = 0.0       # 0 disables engine stalls
+    stall_duration_s: float = 1.0     # frozen window at each cycle start
+    stall_start_s: float = 0.0        # no stalls before this instant (lets
+    #                                   callers land the first window once
+    #                                   work is actually resident)
+    stall_tiers: Tuple[str, ...] = ("edge",)
+    net_spike_period_s: float = 0.0   # 0 disables delay spikes
+    net_spike_duration_s: float = 0.5
+    net_spike_extra_s: float = 0.5
+    drop_completion_p: float = 0.0    # 0 disables completion drops
+    seed: int = 0
+
+
+class FaultInjector:
+    """Deterministic fault schedule (see module docstring)."""
+
+    def __init__(self, cfg: FaultConfig = None):
+        self.cfg = FaultConfig() if cfg is None else cfg
+        self._rng = np.random.default_rng(self.cfg.seed)
+        self.stall_hits = 0       # times a stalled engine was consulted
+        self.spiked = 0           # completions that got a delay spike
+        self.dropped = 0          # completions dropped
+
+    def stalled(self, tier: str, engine_index: int, now: float,
+                pool_size: int = 1) -> bool:
+        """Is this pool member frozen at virtual time ``now``? One victim
+        per cycle, rotating through the pool so every member gets its turn
+        to fail."""
+        c = self.cfg
+        if c.stall_period_s <= 0 or tier not in c.stall_tiers:
+            return False
+        if now < c.stall_start_s:
+            return False
+        cycle, phase = divmod(now - c.stall_start_s, c.stall_period_s)
+        if phase >= c.stall_duration_s:
+            return False
+        hit = int(cycle) % max(pool_size, 1) == engine_index
+        if hit:
+            self.stall_hits += 1
+        return hit
+
+    def net_spike(self, now: float) -> float:
+        """Extra network transit delay at virtual time ``now``."""
+        c = self.cfg
+        if c.net_spike_period_s <= 0:
+            return 0.0
+        if now % c.net_spike_period_s < c.net_spike_duration_s:
+            self.spiked += 1
+            return c.net_spike_extra_s
+        return 0.0
+
+    def drop_completion(self, now: float) -> bool:
+        """Should this completion be lost in transit? One seeded draw per
+        completion — deterministic given the completion order, which the
+        virtual clock already fixes."""
+        c = self.cfg
+        if c.drop_completion_p <= 0:
+            return False
+        hit = bool(self._rng.random() < c.drop_completion_p)
+        if hit:
+            self.dropped += 1
+        return hit
+
+
+__all__ = ["FaultInjector", "FaultConfig"]

@@ -28,12 +28,41 @@ Two backends:
 Policies: "eaco" (collaborative gate) or "fixed:<arm_idx>" baselines —
 fixed:0 = SLM-only, fixed:1 = naive edge RAG, fixed:2 = 3B+GraphRAG,
 fixed:3 = 72B+GraphRAG (the paper's Table 4 rows).
+
+**Overload robustness (engines backend).** The failover/escalation state
+machine sits above the scheduler's preempt/shed/timeout machinery
+(:mod:`repro.serving.scheduler`):
+
+* *watermark escalation* — an edge-bound query arriving while the edge
+  pool's saturation is at/above ``overload_watermark`` is routed straight
+  to the cloud tier (``failed_over`` counter, ``StepLog.rerouted``), and
+  ``_finalize`` prices it with the CLOUD tier spec + cloud transit, so the
+  cost model and the SafeOBO update see the TRUE cost/delay of the
+  re-route, not the arm's nominal tier.
+* *retry with bounded exponential backoff* — a scheduler ``Shed``
+  (deadline / timeout / overload) or a completion dropped in transit
+  (:class:`~repro.cluster.faults.FaultInjector`) re-submits the query —
+  edge failures escalate to cloud — after ``failover_backoff_s * 2**n``
+  (capped), with a fresh deadline. After ``failover_max_retries``
+  resubmissions the query is terminal: ``outcome="shed"`` (gave up on a
+  scheduler shed) or ``"failed"`` (lost completion), logged with zero
+  cost and ``correct=False``, never silently dropped.
+* *conservation* — ``submitted == completed + shed + failed`` over the
+  counters, with nothing left pending; :meth:`EACOCluster.conservation_ok`
+  checks it and ``benchmarks/cluster_bench.py --check`` gates on it.
+* the gate learns only from SERVED completions; terminal drops surface in
+  counters/metrics instead of feeding SafeOBO a synthetic reward.
+
+All knobs default off (no shedding, no timeout, no watermark, no faults),
+which reproduces the pre-overload closed loop exactly.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -48,6 +77,7 @@ from repro.core.gating import (
     PAPER_ARMS, Arm, CollaborativeGate, Decision, QueryContext,
 )
 from repro.core.knowledge import AdaptiveKnowledgeUpdater, KnowledgeUpdateConfig
+from repro.cluster.faults import FaultConfig, FaultInjector
 from repro.cluster.network import NetworkConfig, NetworkModel
 from repro.cluster.oracle import AccuracyOracle
 from repro.cluster.workload import QueryEvent, WorkloadConfig, WorkloadGenerator
@@ -98,6 +128,10 @@ class StepLog:
     tier: str = ""                  # engines backend: serving tier name
     queue_wait_s: float = 0.0       # engines backend: submit -> admission
     engine_s: float = 0.0           # engines backend: admission -> finish
+    outcome: str = "ok"             # "ok" | "shed" | "failed" (terminal)
+    slo: str = "interactive"        # SLO class the query was served under
+    rerouted: bool = False          # escalated off its nominal tier
+    attempts: int = 0               # failover resubmissions before terminal
 
 
 @dataclass
@@ -132,11 +166,23 @@ class SimConfig:
     mean_arrivals: float = 1.5      # Poisson mean queries per arrival step
     max_arrivals: int = 6           # burst cap per step
     hot_topic_boost: float = 0.0    # extra interest mass on the hot topic
+    # ---- overload robustness (all off by default = pre-overload loop) --
+    preemption: bool = True         # scheduler may reclaim residents (only
+    #                                 fires across SLO classes, see scheduler)
+    shed_overdue: bool = False      # shed queued work past its deadline
+    request_timeout_s: Optional[float] = None   # stuck-resident timeout
+    overload_watermark: Optional[float] = None  # edge saturation -> cloud
+    failover_max_retries: int = 2   # resubmissions before terminal drop
+    failover_backoff_s: float = 0.25            # base of 2**n backoff
+    failover_backoff_cap_s: float = 2.0
+    drain_timeout_s: float = 300.0  # virtual-s wedge guard while draining
+    stall_tick_s: float = 0.05      # idle clock step when faults stall all
 
 
 @dataclass
 class _Pending:
-    """Host-side record of a submitted query, joined to its Completion."""
+    """Host-side record of a submitted query, joined to its Completion (or
+    carried through failover resubmissions until a terminal outcome)."""
     ev: QueryEvent
     qc: QueryContext
     arm: Arm
@@ -145,6 +191,10 @@ class _Pending:
     net_delay_s: float
     phase: str
     request: Request
+    tier_name: str = "edge"         # tier currently serving the query
+    attempts: int = 0               # resubmissions so far
+    rerouted: bool = False          # ever escalated off the nominal tier
+    last_reason: str = ""           # last failure reason ("" = none)
 
 
 class EACOCluster:
@@ -156,7 +206,8 @@ class EACOCluster:
                  backend: str = "oracle",
                  engines: Optional[Dict[str, Union[
                      ServingEngine, Sequence[ServingEngine]]]] = None,
-                 clock: Optional[VirtualClock] = None):
+                 clock: Optional[VirtualClock] = None,
+                 faults: Optional[FaultInjector] = None):
         self.corpus = corpus
         # default built per instance — a shared default SimConfig would let
         # one caller's mutation leak into every later default construction
@@ -204,11 +255,25 @@ class EACOCluster:
         # ---- engines backend: one virtual clock, real engine pools -----
         self.clock = VirtualClock() if clock is None else clock
         self.sched: Optional[TierScheduler] = None
+        self.faults = faults
         self._pending: Dict[int, _Pending] = {}
+        # failover retry queue: (ready_at, seq, pending) — resubmitted once
+        # the virtual clock passes ready_at (bounded exponential backoff)
+        self._retries: List[Tuple[float, int, _Pending]] = []
+        self._retry_seq = itertools.count()
+        # request-conservation ledger: submitted == completed + shed +
+        # failed once nothing is outstanding (see conservation_ok)
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "completed": 0, "shed": 0, "failed": 0,
+            "failed_over": 0, "retries": 0, "dropped_completions": 0,
+            "prefix_invalidations": 0}
         if backend == "engines":
             if engines is None:
                 engines = self.build_engines()
-            self.sched = TierScheduler(engines, clock=self.clock)
+            self.sched = TierScheduler(
+                engines, clock=self.clock, preempt=cfg.preemption,
+                shed_overdue=cfg.shed_overdue,
+                request_timeout_s=cfg.request_timeout_s)
             if set(self.sched.pools) != {"edge", "cloud"}:
                 raise ValueError(
                     f"engines backend needs 'edge' and 'cloud' tiers, got "
@@ -324,10 +389,24 @@ class EACOCluster:
                              accuracy=1.0 if log.correct else 0.0,
                              delay=log.delay)
         # adaptive knowledge update: cloud observes all served queries
-        self.updater.observe_query(ev.edge_id, ev.qa.question,
-                                   self.stores[ev.edge_id], now=ev.t)
+        self._observe_and_invalidate(ev)
+        self.counters["submitted"] += 1
+        self.counters["completed"] += 1
         self.logs.append(log)
         return log
+
+    def _observe_and_invalidate(self, ev: QueryEvent) -> None:
+        """Feed the adaptive-knowledge updater; when it SHIPS an update
+        (rotating the edge's knowledge chunks), every edge engine's prefix
+        cache is invalidated so a stale retrieved-context prefix can never
+        serve a post-update query — the next same-context prompt recomputes
+        against the rotated knowledge."""
+        shipped = self.updater.observe_query(
+            ev.edge_id, ev.qa.question, self.stores[ev.edge_id], now=ev.t)
+        if shipped and self.sched is not None:
+            for e in self.sched.pools["edge"]:
+                e.invalidate_prefix_cache()
+            self.counters["prefix_invalidations"] += 1
 
     # ------------------------------------------------------------------
     # Engines backend: gate decision -> real engine -> completion -> update
@@ -347,7 +426,12 @@ class EACOCluster:
     def submit_query(self, ev: QueryEvent) -> Request:
         """One gate decision routed to a real engine: decide, retrieve,
         build the prompt, submit to the tier's pool on the virtual clock.
-        The SafeOBO update happens when the completion surfaces."""
+        The SafeOBO update happens when the completion surfaces.
+
+        With ``overload_watermark`` set, an edge-bound query arriving while
+        the edge pool's saturation is at/above the watermark escalates
+        straight to the cloud tier (recorded as a ``failed_over`` re-route
+        with cloud transit added, so cost/delay reflect the true route)."""
         if self.sched is None:
             raise RuntimeError("submit_query() requires backend='engines'")
         cfg = self.cfg
@@ -355,35 +439,56 @@ class EACOCluster:
         arm, phase = self._decide(qc)
         texts, hit, _ = self._retrieve(arm, ev)
         tier_name = "edge" if arm.generation == "local" else "cloud"
+        _, net_delay = self._tier_and_net(arm, qc)
+        rerouted = False
+        if (tier_name == "edge" and cfg.overload_watermark is not None
+                and self.sched.saturation("edge") >= cfg.overload_watermark):
+            tier_name = "cloud"
+            rerouted = True
+            net_delay += qc.d_cloud          # the re-route pays cloud transit
+            self.counters["failed_over"] += 1
         max_new = (cfg.max_new_graph if arm.retrieval == "graph"
                    else cfg.max_new_slm)
         max_seq = min(e.max_seq for e in self.sched.pools[tier_name])
         prompt = self._build_prompt(ev, texts, max_seq - max_new - 8)
-        req = Request(prompt, max_new_tokens=max_new)
-        _, net_delay = self._tier_and_net(arm, qc)
+        req = Request(prompt, max_new_tokens=max_new, slo="interactive")
         now = self.clock.now()
+        self.counters["submitted"] += 1
         self._pending[id(req)] = _Pending(ev, qc, arm, hit, texts,
-                                          net_delay, phase, req)
+                                          net_delay, phase, req,
+                                          tier_name=tier_name,
+                                          rerouted=rerouted)
         self.sched.submit(req, tier_name,
                           deadline_s=now + cfg.qos_max_delay, now=now)
-        self.updater.observe_query(ev.edge_id, ev.qa.question,
-                                   self.stores[ev.edge_id], now=ev.t)
+        self._observe_and_invalidate(ev)
         return req
 
     def pump_engines(self) -> List[StepLog]:
-        """One scheduling round on the virtual clock: admit + one fused
-        decode step per engine, then advance the clock by the round's
+        """One scheduling round on the virtual clock: resubmit due failover
+        retries, admit + one fused decode step per engine (skipping
+        fault-stalled pool members), then advance the clock by the round's
         service time — ``modeled`` (tier rates x real token counts;
         deterministic) or ``wall`` (measured jit seconds). Pools run in
         parallel, so the round costs the SLOWEST engine's time. Completions
-        harvested this round close the loop: measured delay and real token
-        counts feed the cost model and the gate."""
+        harvested this round close the loop (measured delay and real token
+        counts feed the cost model and the gate) unless the fault layer
+        drops them in transit; scheduler sheds and dropped completions go
+        through the failover path."""
         if self.sched is None:
             raise RuntimeError("pump_engines() requires backend='engines'")
+        now = self.clock.now()
+        self._resubmit_ready(now)
+        stalled = None
+        if self.faults is not None:
+            pools = self.sched.pools
+
+            def stalled(t: str, i: int, _now: float = now) -> bool:
+                return self.faults.stalled(t, i, _now, len(pools[t]))
+
         flat = [(t, e) for t, pool in self.sched.pools.items() for e in pool]
         pre = [(e.prefill_tokens, e.decode_rounds, e.prefill_s + e.decode_s)
                for _, e in flat]
-        comps = self.sched.pump(now=self.clock.now())
+        comps = self.sched.pump(now=now, stalled=stalled)
         dt = 0.0
         for (tier_name, e), (p0, r0, w0) in zip(flat, pre):
             if self.cfg.engine_time == "wall":
@@ -397,17 +502,92 @@ class EACOCluster:
             dt = max(dt, dt_e)
         if dt > 0:
             self.clock.advance(dt)
-        return [self._finalize(c) for c in comps]
+        t_done = self.clock.now()
+        out: List[StepLog] = []
+        for c in comps:
+            if (self.faults is not None
+                    and self.faults.drop_completion(t_done)):
+                self.counters["dropped_completions"] += 1
+                p = self._pending.pop(id(c.request))
+                self._handle_failure(p, "dropped", t_done)
+                continue
+            out.append(self._finalize(c))
+        for s in self.sched.pop_sheds():
+            p = self._pending.pop(id(s.request))
+            self._handle_failure(p, s.reason, t_done)
+        return out
+
+    # ---- failover / escalation ----------------------------------------
+    def _handle_failure(self, p: _Pending, reason: str, now: float) -> None:
+        """A query failed on its current tier (scheduler shed or dropped
+        completion). Retry with bounded exponential backoff — edge
+        failures ESCALATE to the cloud tier — until ``failover_max_retries``
+        resubmissions, then record the typed terminal outcome."""
+        cfg = self.cfg
+        p.last_reason = reason
+        if p.attempts >= cfg.failover_max_retries:
+            outcome = "failed" if reason == "dropped" else "shed"
+            self.counters[outcome] += 1
+            self._log_terminal(p, outcome, now)
+            return
+        backoff = min(cfg.failover_backoff_s * (2.0 ** p.attempts),
+                      cfg.failover_backoff_cap_s)
+        p.attempts += 1
+        if p.tier_name == "edge":            # escalate to the next tier up
+            p.tier_name = "cloud"
+            p.rerouted = True
+            p.net_delay_s += p.qc.d_cloud    # true transit of the new route
+            self.counters["failed_over"] += 1
+        self.counters["retries"] += 1
+        heapq.heappush(self._retries,
+                       (now + backoff, next(self._retry_seq), p))
+
+    def _resubmit_ready(self, now: float) -> None:
+        """Re-enter retry-queue entries whose backoff has expired: rebuild
+        the prompt for the (possibly escalated) tier's geometry, register a
+        fresh Request, and submit with a fresh deadline."""
+        cfg = self.cfg
+        while self._retries and self._retries[0][0] <= now:
+            _, _, p = heapq.heappop(self._retries)
+            max_new = p.request.max_new_tokens
+            max_seq = min(e.max_seq for e in self.sched.pools[p.tier_name])
+            prompt = self._build_prompt(p.ev, p.texts, max_seq - max_new - 8)
+            req = Request(prompt, max_new_tokens=max_new,
+                          slo=p.request.slo)
+            p.request = req
+            self._pending[id(req)] = p
+            self.sched.submit(req, p.tier_name,
+                              deadline_s=now + cfg.qos_max_delay, now=now)
+
+    def _log_terminal(self, p: _Pending, outcome: str, now: float) -> None:
+        """Typed terminal record for a query the cluster gave up on: zero
+        cost/tokens, ``correct=False``, age as delay. The gate is NOT
+        updated — SafeOBO learns from served completions only; drops
+        surface through counters and the conservation gate instead."""
+        self.logs.append(StepLog(
+            t=p.ev.t, edge_id=p.ev.edge_id, arm=p.arm.idx,
+            arm_name=p.arm.name, correct=False,
+            delay=max(now - p.ev.t, 0.0), cost=0.0, u_r=0.0, u_d=0.0,
+            hit=p.hit, overlap=p.qc.overlap, multihop=p.ev.qa.multihop,
+            in_tokens=0.0, out_tokens=0.0, phase=p.phase,
+            retrieved=p.texts, tier=p.tier_name, outcome=outcome,
+            slo=p.request.slo, rerouted=p.rerouted, attempts=p.attempts))
 
     def _finalize(self, c: Completion) -> StepLog:
         """Join a Completion back to its query: real token counts -> cost,
         composed virtual-clock delay -> QoS, oracle -> accuracy, and (eaco)
-        the SafeOBO update that closes the control loop."""
+        the SafeOBO update that closes the control loop. The tier spec is
+        taken from the tier that ACTUALLY served the completion — a
+        watermark or failover re-route prices at the cloud tier, so the
+        cost model and the gate see the true cost/delay of the re-route."""
         p = self._pending.pop(id(c.request))
-        tier, _ = self._tier_and_net(p.arm, p.qc)
+        tier = self.edge_tier if c.tier == "edge" else self.cloud_tier
         in_t = float(c.prompt_tokens)
         out_t = float(max(c.new_tokens, 1))
-        delay = (tier.base_delay_s + p.net_delay_s
+        net_delay = p.net_delay_s
+        if self.faults is not None:
+            net_delay += self.faults.net_spike(self.clock.now())
+        delay = (tier.base_delay_s + net_delay
                  + c.queue_wait_s + c.time_in_engine_s)
         u_r = inference_tflops(tier.model_params_b, in_t, out_t)
         u_d = time_cost_tflops(tier, delay)
@@ -420,25 +600,69 @@ class EACOCluster:
             u_r=u_r, u_d=u_d, hit=p.hit, overlap=p.qc.overlap,
             multihop=p.ev.qa.multihop, in_tokens=in_t, out_tokens=out_t,
             phase=p.phase, retrieved=p.texts, tier=c.tier,
-            queue_wait_s=c.queue_wait_s, engine_s=c.time_in_engine_s)
+            queue_wait_s=c.queue_wait_s, engine_s=c.time_in_engine_s,
+            slo=c.slo, rerouted=p.rerouted, attempts=p.attempts)
+        self.counters["completed"] += 1
         if self.policy == "eaco":
             self.gate.update(p.qc, p.arm, cost=cost,
                              accuracy=1.0 if correct else 0.0, delay=delay)
         self.logs.append(log)
         return log
 
+    def conservation_ok(self) -> bool:
+        """The request-conservation law: every submitted query reached a
+        terminal state (completed, shed, or failed) and nothing is still
+        outstanding. Benchmarks gate on this so future PRs can't silently
+        drop work."""
+        c = self.counters
+        outstanding = len(self._pending) + len(self._retries)
+        return (c["submitted"] == c["completed"] + c["shed"] + c["failed"]
+                + outstanding)
+
     def drain_engines(self) -> List[StepLog]:
-        """Serve until every submitted query has completed."""
+        """Serve until every outstanding query reaches a terminal state
+        (completion, shed, or failed), riding out fault-stalled engines and
+        waiting out failover backoffs by idling the virtual clock forward.
+        Raises ``RuntimeError`` if no terminal progress happens within
+        ``drain_timeout_s`` virtual seconds — a wedge fails loudly instead
+        of spinning forever."""
         if self.sched is None:
             raise RuntimeError("drain_engines() requires backend='engines'")
         out: List[StepLog] = []
-        while self.sched.pending() or self.sched.in_flight():
-            before = (self.clock.now(), len(self.logs))
+
+        def progress() -> tuple:
+            # REAL progress only — the clock moving (including our own idle
+            # advances below) must not reset the wedge guard
+            return (len(self.logs), self.sched.pending(),
+                    self.sched.in_flight(), len(self._retries),
+                    tuple(self.sched.counters.values()))
+
+        wedge_at = self.clock.now() + self.cfg.drain_timeout_s
+        while self._pending or self._retries:
+            before = progress()
+            t0 = self.clock.now()
             out.extend(self.pump_engines())
-            if (self.clock.now(), len(self.logs)) == before:
+            if progress() != before:
+                wedge_at = self.clock.now() + self.cfg.drain_timeout_s
+                continue
+            if self.clock.now() >= wedge_at:
                 raise RuntimeError(
-                    f"scheduler stalled with {self.sched.pending()} queued "
-                    f"and {self.sched.in_flight()} in flight")
+                    f"cluster wedged: {self.sched.pending()} queued, "
+                    f"{self.sched.in_flight()} resident, "
+                    f"{len(self._retries)} awaiting retry with no progress "
+                    f"for {self.cfg.drain_timeout_s}s of virtual time")
+            if self.clock.now() > t0:
+                continue      # modeled time moved; let fault windows expire
+            # nothing can move until a backoff or stall window expires —
+            # idle the clock toward the next actionable instant instead of
+            # spinning, bounded by the wedge guard above
+            if self._retries and not (self.sched.pending()
+                                      or self.sched.in_flight()):
+                step = max(self._retries[0][0] - self.clock.now(),
+                           self.cfg.stall_tick_s)
+            else:
+                step = self.cfg.stall_tick_s
+            self.clock.advance(step)
         return out
 
     def run(self, n_steps: int) -> List[StepLog]:
@@ -453,8 +677,8 @@ class EACOCluster:
             # serve until the engines' virtual time reaches the next
             # arrival tick, then idle the clock forward to it
             target = self.clock.now() + period
-            while ((self.sched.pending() or self.sched.in_flight())
-                   and self.clock.now() < target):
+            while ((self.sched.pending() or self.sched.in_flight()
+                    or self._retries) and self.clock.now() < target):
                 before = self.clock.now()
                 self.pump_engines()
                 if self.clock.now() <= before:
@@ -465,16 +689,25 @@ class EACOCluster:
         return self.logs
 
     # ------------------------------------------------------------------
-    def metrics(self, skip_warmup: bool = True) -> Dict[str, float]:
+    def metrics(self, skip_warmup: bool = True) -> Dict[str, Any]:
+        """Aggregates over SERVED completions (``outcome == "ok"``);
+        terminal drops are reported via ``drop_rate`` and ``counters``
+        instead of skewing the served-quality means with zero-cost rows."""
         logs = self.logs
         if skip_warmup and self.policy == "eaco":
             logs = [l for l in logs if l.phase != "warmup"]
+        dropped = sum(l.outcome != "ok" for l in logs)
+        logs = [l for l in logs if l.outcome == "ok"]
         if not logs:
             return {}
         acc = float(np.mean([l.correct for l in logs]))
         n_arms = len(self.gate.arms)
         return {
             "n": len(logs),
+            "dropped": dropped,
+            "drop_rate": dropped / max(len(logs) + dropped, 1),
+            "rerouted": sum(l.rerouted for l in logs),
+            "counters": dict(self.counters),
             "accuracy": acc,
             "delay_mean": float(np.mean([l.delay for l in logs])),
             "delay_std": float(np.std([l.delay for l in logs])),
@@ -491,4 +724,5 @@ class EACOCluster:
         }
 
 
-__all__ = ["EACOCluster", "SimConfig", "StepLog"]
+__all__ = ["EACOCluster", "SimConfig", "StepLog", "FaultInjector",
+           "FaultConfig"]

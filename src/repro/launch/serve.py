@@ -14,13 +14,22 @@ suffix is prefilled. Pass ``--no-prefix-cache`` to disable the sharing,
 ``--kv-layout contiguous`` for the worst-case per-slot lanes,
 ``--page-size`` / ``--num-pages`` to shape the page pool, and ``--static``
 to run the blocking static-batch baseline (one padded batch at a time).
+
+The continuous path runs through the SLO-aware :class:`TierScheduler`:
+``--slo-class`` tags every prompt (interactive sorts ahead of batch and
+may preempt resident batch work when slots run out), ``--no-preemption``
+disables resident reclaim, and ``--overload-watermark`` sheds batch-class
+submissions (typed, reported per prompt) once queued + resident work
+reaches that multiple of slot capacity.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 from repro.configs import get_config
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.scheduler import TierScheduler
 
 
 def main():
@@ -44,6 +53,18 @@ def main():
                     action=argparse.BooleanOptionalAction,
                     help="share KV pages across common prompt prefixes "
                          "(paged layout only; --no-prefix-cache disables)")
+    ap.add_argument("--slo-class", default="interactive",
+                    choices=["interactive", "batch"],
+                    help="SLO class tagged on every prompt (interactive "
+                         "sorts ahead of batch and may preempt it)")
+    ap.add_argument("--preemption", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="let the scheduler reclaim strictly-lower-"
+                         "priority residents when slots run out")
+    ap.add_argument("--overload-watermark", type=float, default=None,
+                    help="shed batch-class submissions (typed) once "
+                         "(queued + resident) / slot capacity reaches "
+                         "this value")
     ap.add_argument("--prompts", nargs="+",
                     default=["What is the capital of France?"])
     args = ap.parse_args()
@@ -61,7 +82,8 @@ def main():
     print(f"serving {cfg.arch_id} (reduced, {eng.model.n_params():,} params, "
           f"{kv}; random weights — output is noise; the engine is real)")
     reqs = [Request(p, max_new_tokens=args.max_new,
-                    temperature=args.temperature) for p in args.prompts]
+                    temperature=args.temperature, slo=args.slo_class)
+            for p in args.prompts]
     if args.static:
         from repro.serving.engine import GenStats
         texts, chunks = [], []
@@ -78,18 +100,40 @@ def main():
                          prefix_misses=sum(s.prefix_misses for s in chunks),
                          prefix_tokens_shared=sum(s.prefix_tokens_shared
                                                   for s in chunks))
+        for p, t in zip(args.prompts, texts):
+            print(f"> {p!r}\n  -> {t!r}")
+        print(f"[static] prefill {stats.prefill_s*1e3:.0f}ms, "
+              f"{stats.new_tokens} tokens at {stats.tokens_per_s:.1f} "
+              f"tok/s; traces: {eng.trace_counts}")
     else:
-        texts, stats = eng.generate(reqs)
-    for p, t in zip(args.prompts, texts):
-        print(f"> {p!r}\n  -> {t!r}")
-    mode = "static" if args.static else "continuous"
-    print(f"[{mode}] prefill {stats.prefill_s*1e3:.0f}ms, "
-          f"{stats.new_tokens} tokens at {stats.tokens_per_s:.1f} tok/s; "
-          f"traces: {eng.trace_counts}")
+        sched = TierScheduler({"edge": eng}, preempt=args.preemption,
+                              overload_watermark=args.overload_watermark)
+        t0 = time.perf_counter()
+        for r in reqs:
+            sched.submit(r, "edge")
+        comps = {id(c.request): c for c in sched.drain()}
+        wall = time.perf_counter() - t0
+        sheds = {id(s.request): s for s in sched.pop_sheds()}
+        for p, r in zip(args.prompts, reqs):
+            if id(r) in comps:
+                c = comps[id(r)]
+                tag = (f"  [preempted x{c.preemptions}, resumed]"
+                       if c.preemptions else "")
+                print(f"> {p!r}\n  -> {c.text!r}{tag}")
+            else:
+                s = sheds[id(r)]
+                print(f"> {p!r}\n  -> SHED({s.reason}) after "
+                      f"{s.queue_wait_s:.2f}s queued")
+        tokens = sum(c.new_tokens for c in comps.values())
+        sc = sched.counters
+        print(f"[continuous] {len(comps)}/{len(reqs)} served, {tokens} "
+              f"tokens at {tokens / max(wall, 1e-9):.1f} tok/s; "
+              f"preempted {sc['preempted']}, resumed {sc['resumed']}, "
+              f"shed {sched.shed_total}; traces: {eng.trace_counts}")
     if eng.kv_layout == "paged" and eng.prefix_cache_enabled:
-        print(f"[prefix-cache] {stats.prefix_hits} hits / "
-              f"{stats.prefix_misses} misses, "
-              f"{stats.prefix_tokens_shared} prompt tokens served from "
+        print(f"[prefix-cache] {eng.prefix_hits} hits / "
+              f"{eng.prefix_misses} misses, "
+              f"{eng.prefix_tokens_shared} prompt tokens served from "
               f"shared pages")
 
 

@@ -56,7 +56,12 @@ class KnowledgeGraph:
             counts.update(set(ws))
         df_cap = max(int(self.max_df * len(self.chunks)),
                      self.min_entity_count + 1)
-        vocab = [w for w, n in counts.most_common(self.max_entities)
+        # rank by (count desc, word) — most_common breaks count ties by
+        # Counter insertion order, i.e. string-hash order, which made the
+        # graph (and community coverage) vary with PYTHONHASHSEED
+        ranked = sorted(counts.items(),
+                        key=lambda kv: (-kv[1], kv[0]))[:self.max_entities]
+        vocab = [w for w, n in ranked
                  if self.min_entity_count <= n <= df_cap]
         self.entities = vocab
         self.entity_idx = {w: i for i, w in enumerate(vocab)}

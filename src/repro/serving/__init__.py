@@ -1,13 +1,16 @@
 from repro.serving.engine import (
-    EngineCompletion, EngineError, GenStats, Request, ServingEngine,
-    make_cloud_engine, make_edge_engine,
+    EngineCompletion, EngineError, GenStats, PreemptedRequest, Request,
+    ServingEngine, make_cloud_engine, make_edge_engine,
 )
 from repro.serving.paging import (
     PageAllocator, PagingError, PrefixCache, pages_needed,
 )
-from repro.serving.scheduler import Completion, TierScheduler
+from repro.serving.scheduler import (
+    Completion, SchedulerError, Shed, TierScheduler,
+)
 
 __all__ = ["ServingEngine", "Request", "GenStats", "EngineCompletion",
-           "EngineError", "make_edge_engine", "make_cloud_engine",
-           "TierScheduler", "Completion",
+           "EngineError", "PreemptedRequest",
+           "make_edge_engine", "make_cloud_engine",
+           "TierScheduler", "Completion", "SchedulerError", "Shed",
            "PageAllocator", "PrefixCache", "PagingError", "pages_needed"]

@@ -65,6 +65,32 @@ paged mode, enough allocatable pages (free + LRU-evictable) for the
 request's *unshared* pages. ``step()`` runs ONE fused decode for all slots
 at ``[max_batch, 1]``.
 
+**Feasibility is explicit, never silent.** A prompt longer than
+``max_seq - 1`` tokens can never leave room for a single generated token;
+admitting it truncated would silently drop the prompt *tail* — which in a
+context-first RAG prompt is the question itself. Such requests are
+*infeasible*: :meth:`fits` answers False, :meth:`can_admit` permanently
+refuses (so schedulers reject at submit instead of wedging their
+deadline-ordered queue behind an inadmissible head), and :meth:`admit` /
+:meth:`generate` raise :class:`EngineError`.
+
+**Preemption (the overload state machine, engine side).** A resident
+request can be reclaimed mid-decode with :meth:`preempt`: the slot is
+freed immediately and every page reference is dropped exactly as on normal
+retirement — private suffix pages return to the allocator while shared
+prefix pages the index values survive in the LRU pool. The caller receives
+a :class:`PreemptedRequest` snapshot (encoded prompt + tokens emitted so
+far + remaining budget). Resuming is just a new admission of ``prompt_ids
+= enc + emitted`` (token ids, via :attr:`Request.prompt_ids`, because
+generated ids need not round-trip through text): the prefix cache matches
+the original prompt's blocks — still indexed from the first admission —
+so only the generated suffix is recomputed, and greedy decode emits the
+exact tokens the victim would have produced uninterrupted (the sampled-
+but-unemitted ``pending`` token is deliberately NOT part of the snapshot;
+greedy resume re-derives it from identical logits). The scheduler layers
+shed/timeout/failover on top (:mod:`repro.serving.scheduler`,
+:mod:`repro.cluster.simulator`).
+
 All jitted functions run at fixed shapes — decode, sampling, page-copy and
 (contiguous) insert compile exactly once per engine config; prefill
 compiles once per power-of-two pad bucket (heavy-tailed prompt mixes
@@ -127,6 +153,10 @@ class Request:
     prompt: str
     max_new_tokens: int = 32
     temperature: float = 0.0     # 0 = greedy
+    slo: str = "batch"           # SLO class: "interactive" | "batch"
+    # pre-encoded prompt override (resume path): generated token ids need
+    # not round-trip through text, so a preemption resume carries raw ids
+    prompt_ids: Optional[List[int]] = None
 
 
 @dataclass
@@ -142,6 +172,22 @@ class EngineCompletion:
 
 
 @dataclass
+class PreemptedRequest:
+    """Resumable snapshot returned by :meth:`ServingEngine.preempt`.
+
+    ``prompt_ids + emitted_ids`` is the exact token state to re-admit
+    (as :attr:`Request.prompt_ids`); the sampled-but-unemitted pending
+    token is intentionally absent — greedy resume recomputes it from
+    identical logits, keeping resumed output token-identical."""
+    req_id: int
+    request: Request
+    prompt_ids: List[int]        # the prompt as admitted (encoded)
+    emitted_ids: List[int]       # tokens generated before preemption
+    prompt_tokens: int
+    budget_left: int             # decode budget remaining at preemption
+
+
+@dataclass
 class _Slot:
     req_id: int
     request: Request
@@ -151,6 +197,7 @@ class _Slot:
     admitted_at: float
     page_ids: Optional[np.ndarray] = None   # pages referenced (shared+own)
     out_ids: List[int] = field(default_factory=list)
+    enc: List[int] = field(default_factory=list)   # encoded prompt
 
 
 @dataclass
@@ -159,6 +206,7 @@ class _Plan:
     generation: matches go stale whenever pages move)."""
     enc: List[int]
     budget: int
+    feasible: bool = True        # prompt fits max_seq - 1 (never truncated)
     total_pages: int = 0
     shared_ids: List[int] = field(default_factory=list)   # full-block pages
     tail: Optional[Tuple[int, int]] = None   # (CoW source page, tokens)
@@ -262,6 +310,7 @@ class ServingEngine:
         self.prefix_hits = 0      # engine-lifetime prefix-cache counters
         self.prefix_misses = 0
         self.prefix_tokens_shared = 0
+        self.preemptions = 0      # residents reclaimed via preempt()
 
         # ---- fixed-shape jitted functions with trace instrumentation ------
         # the counters increment only when JAX (re)traces a function, so a
@@ -421,6 +470,24 @@ class ServingEngine:
             p = -(-p // qc) * qc          # blockwise prefill needs qc chunks
         return min(p, self.max_seq)
 
+    def _encode(self, request: Request) -> List[int]:
+        """Token ids for a request's prompt: the pre-encoded override when
+        present (preemption resume carries generated ids that need not
+        round-trip through text), otherwise the tokenizer."""
+        if request.prompt_ids is not None:
+            return [int(t) for t in request.prompt_ids]
+        return self.tok.encode(request.prompt)
+
+    def fits(self, request: Request) -> bool:
+        """Could this request EVER be admitted here (i.e. on an idle
+        engine)? False when the encoded prompt is empty or cannot leave
+        room for one generated token — admission would have to silently
+        truncate the prompt tail (the question, in a context-first RAG
+        prompt), so such requests are rejected up front instead
+        (:class:`SchedulerError <repro.serving.scheduler.SchedulerError>`
+        at submit; :class:`EngineError` at admit)."""
+        return 1 <= len(self._encode(request)) <= self.max_seq - 1
+
     def _plan(self, request: Request) -> _Plan:
         """Admission plan: encoded prompt, decode budget and — in paged
         mode — the prefix-cache match (shared full-block pages + CoW tail)
@@ -428,13 +495,18 @@ class ServingEngine:
         seen at the current page-state generation: a queue head blocked on
         pages is re-planned by ``can_admit`` every decode step, and
         ``admit`` re-plans right after the ``can_admit`` that green-lit it
-        — but any alloc/free/evict in between invalidates the match."""
+        — but any alloc/free/evict in between invalidates the match.
+        Prompts that cannot fit are marked infeasible, never truncated."""
         gen = self._allocator.generation if self._allocator else 0
         cached = self._plan_cache
         if cached is not None and cached[0] is request and cached[1] == gen:
             return cached[2]
-        enc = self.tok.encode(request.prompt)[: self.max_seq - 1]
+        enc = self._encode(request)
         L = len(enc)
+        if not 1 <= L <= self.max_seq - 1:
+            plan = _Plan(enc, 0, feasible=False)
+            self._plan_cache = (request, gen, plan)
+            return plan
         budget = max(0, min(request.max_new_tokens, self.max_seq - L))
         plan = _Plan(enc, budget)
         if self.kv_layout == "paged":
@@ -454,9 +526,11 @@ class ServingEngine:
         becomes admissible again."""
         if self.free_slots == 0:
             return False
+        plan = self._plan(request)
+        if not plan.feasible:
+            return False
         if self.kv_layout != "paged":
             return True
-        plan = self._plan(request)
         return self._allocator.can_reserve(plan.need_fresh, plan.reuse_ids)
 
     def admit(self, request: Request) -> int:
@@ -470,6 +544,11 @@ class ServingEngine:
         if slot is None:
             raise RuntimeError("no free slot; check can_admit before admit")
         plan = self._plan(request)
+        if not plan.feasible:
+            raise EngineError(
+                f"prompt of {len(plan.enc)} tokens cannot fit max_seq "
+                f"{self.max_seq} with >=1 generated token; refusing to "
+                "truncate silently")
         enc, budget = plan.enc, plan.budget
         L = len(enc)
 
@@ -537,7 +616,7 @@ class ServingEngine:
         self._next_req_id += 1
         self._slots[slot] = _Slot(rid, request, budget, L, pending,
                                   admitted_at=time.perf_counter(),
-                                  page_ids=page_ids)
+                                  page_ids=page_ids, enc=enc)
         self._tokens[slot] = pending
         self._positions[slot] = L
         self._temps[slot] = request.temperature
@@ -600,6 +679,47 @@ class ServingEngine:
         self._positions[slot] = 0     # inactive lanes park at position 0
         self._temps[slot] = 0.0
 
+    def preempt(self, req_id: int) -> PreemptedRequest:
+        """Reclaim a resident request mid-decode and return a resumable
+        snapshot. The slot and every page reference are released exactly as
+        on normal retirement (private suffix pages go back to the
+        allocator; shared prefix pages the index values park in the LRU
+        pool), so page accounting balances to the admission-time state.
+
+        The snapshot excludes the sampled-but-unemitted pending token:
+        resuming re-admits ``prompt_ids = enc + emitted_ids`` (through
+        :attr:`Request.prompt_ids`), the prefix cache serves the original
+        prompt's pages, only the generated suffix is recomputed, and greedy
+        decode re-derives the pending token from identical logits — so a
+        preempted-then-resumed greedy request is token-identical to an
+        uninterrupted run. Raises :class:`EngineError` for unknown ids."""
+        slot = next((i for i, s in enumerate(self._slots)
+                     if s is not None and s.req_id == req_id), None)
+        if slot is None:
+            raise EngineError(f"preempt: request {req_id} is not resident")
+        s = self._slots[slot]
+        snap = PreemptedRequest(
+            req_id=s.req_id, request=s.request, prompt_ids=list(s.enc),
+            emitted_ids=list(s.out_ids), prompt_tokens=s.prompt_tokens,
+            budget_left=s.budget - len(s.out_ids))
+        self._free(slot)
+        self.preemptions += 1
+        return snap
+
+    def invalidate_prefix_cache(self) -> int:
+        """Drop every prefix-cache entry (knowledge rotation made cached
+        retrieved-context prefixes stale). Bumps the allocator generation
+        so memoized admission plans re-match, and leaves refcount-0 pages
+        in the LRU pool unowned — reclaimed on demand, never served again.
+        Returns the number of index entries dropped (0 when the prefix
+        cache is disabled or the layout is contiguous)."""
+        if self._prefix is None:
+            return 0
+        n = self._prefix.clear()
+        self._allocator.bump_generation()
+        self._plan_cache = None
+        return n
+
     # ------------------------------------------------------------------
     # Batch conveniences on top of the pool
     # ------------------------------------------------------------------
@@ -627,6 +747,12 @@ class ServingEngine:
                   ) -> Tuple[List[str], GenStats]:
         if self.has_active:
             raise EngineError("engine already has resident requests")
+        bad = next((r for r in requests if not self.fits(r)), None)
+        if bad is not None:
+            raise EngineError(
+                f"request with {len(self._encode(bad))} prompt tokens can "
+                f"never fit max_seq {self.max_seq}; the pump loop would "
+                "spin on it forever")
         p0, d0 = self.prefill_s, self.decode_s
         t0 = self.trace_counts["prefill"]
         h0, m0, s0 = (self.prefix_hits, self.prefix_misses,
@@ -722,4 +848,5 @@ def make_cloud_engine(*, max_seq: int = 512, max_batch: int = 8,
 
 
 __all__ = ["ServingEngine", "Request", "GenStats", "EngineCompletion",
-           "EngineError", "make_edge_engine", "make_cloud_engine"]
+           "EngineError", "PreemptedRequest", "make_edge_engine",
+           "make_cloud_engine"]

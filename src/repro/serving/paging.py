@@ -95,6 +95,12 @@ class PageAllocator:
     def refcount(self, pid: int) -> int:
         return int(self._refs[int(pid)])
 
+    def bump_generation(self) -> None:
+        """Force plan-memo invalidation without a page state change (e.g.
+        the prefix index was cleared, so cached admission matches are
+        stale even though no page moved)."""
+        self.generation += 1
+
     def is_cached(self, pid: int) -> bool:
         return int(pid) in self._lru
 
@@ -296,6 +302,20 @@ class PrefixCache:
                     bucket.pop(key[2], None)
                     if not bucket:
                         del self._tails[key[1]]
+
+    def clear(self) -> int:
+        """Drop EVERY index entry (knowledge rotation made the cached
+        retrieved-context prefixes stale). Page refcounts are untouched:
+        resident slots keep their mappings, and refcount-0 pages parked in
+        the allocator's LRU pool simply stop being revivable — ``owns``
+        now answers False, so they return to the free list on their next
+        release or are reclaimed on demand. Returns the number of entries
+        dropped."""
+        n = len(self)
+        self._blocks.clear()
+        self._tails.clear()
+        self._page_keys.clear()
+        return n
 
 
 __all__ = ["PageAllocator", "PrefixCache", "PagingError", "pages_needed",

@@ -1,16 +1,62 @@
-"""Request scheduler: arrival queues -> continuous slot-pool admission.
+"""Request scheduler: arrival queues -> continuous slot-pool admission,
+with SLO-aware preemption, load shedding, and stuck-work timeouts.
 
-Per-tier deadline heaps (edge engines + cloud engine) feed the engines'
-slot pools. Instead of the old "pop one rigid batch, block on it" loop,
-``pump()`` runs one scheduling round: for every tier it admits queued
-requests (oldest deadline first) into whatever slots just freed, then
-advances that tier's engines by one fused decode step each, harvesting
-per-request completions mid-stream. The gate decides the tier; the
-scheduler keeps the lanes full.
+Per-tier priority heaps (edge engines + cloud engine) feed the engines'
+slot pools. ``pump()`` runs one scheduling round: for every tier it admits
+queued requests into whatever slots just freed, then advances that tier's
+engines by one fused decode step each, harvesting per-request completions
+mid-stream. The gate decides the tier; the scheduler keeps the lanes full.
 
 A tier may be backed by a POOL of engines (``{"edge": [e0, e1], "cloud":
-e2}``): the tier shares one deadline queue and the head request is admitted
-into the first pool member with a free slot (and, paged, enough pages).
+e2}``): the tier shares one queue and the head request is admitted into the
+first pool member with a free slot (and, paged, enough pages).
+
+**Queue order** is ``(SLO rank, deadline, arrival seq)``: every
+``interactive`` request sorts ahead of every ``batch`` request, and within
+a class the earliest deadline wins. If the head doesn't fit on ANY pool
+member, later requests wait behind it rather than jumping the queue, so a
+big request can't be starved by a stream of small ones.
+
+**The overload state machine** (every transition is a typed outcome,
+never a silent drop)::
+
+    submit ──fits no pool member──────────────────────> SchedulerError
+    submit ──batch + saturation >= overload_watermark──> Shed("overload")
+    queued ──shed_overdue and deadline <= now──────────> Shed("deadline")
+    queued ──head outranks a resident, no slot anywhere─> resident PREEMPTED
+                 (engine snapshot -> re-enqueued -> resumes via prefix
+                  cache, greedy token-identical)
+    resident ──no engine progress for request_timeout_s─> Shed("timeout")
+    resident ──finished────────────────────────────────> Completion
+
+- *Preemption* (``preempt=True``, the default): when the head cannot be
+  admitted anywhere, the WORST resident of the same tier — largest
+  ``(rank, deadline)`` — is reclaimed iff it is STRICTLY lower priority
+  than the head (so uniform-priority workloads never preempt and behave
+  exactly as before). The engine returns a resumable snapshot; the victim
+  re-enters the queue carrying its emitted tokens and resumes as a new
+  admission of ``prompt_ids = enc + emitted``, hitting the prefix cache on
+  its original prompt pages. Greedy resume is token-identical.
+- *Shedding* (``shed_overdue=True``; off by default because wall-clock
+  callers submit with sentinel deadlines): queued requests whose hard
+  deadline has already passed are dropped as ``Shed("deadline")`` before
+  admission — capacity goes to requests that can still meet their SLO.
+- *Timeouts* (``request_timeout_s``): a resident whose engine has made no
+  scheduling progress for that long (e.g. a stalled engine, see the
+  ``stalled`` hook on :meth:`pump`) is preempted off the engine — freeing
+  its slot and pages — and emitted as ``Shed("timeout")``; a cluster layer
+  may then fail it over to another tier.
+- *Admission-time overload shed* (``overload_watermark``): batch-class
+  submissions are shed immediately when the tier's saturation (queued +
+  resident over total slot capacity) is at/above the watermark;
+  interactive submissions always enqueue.
+
+Every terminal outcome is counted (``counters``) and conservation —
+``submitted == completed + shed + timed_out + overload_shed + queued +
+resident`` — is checkable at any time via :meth:`conservation_ok`, so work
+can never vanish. ``drain()`` detects wedges (no admission, step, shed, or
+preemption progress while work remains) and raises :class:`SchedulerError`
+instead of spinning forever.
 
 All timings run on an injectable ``clock`` (any zero-arg callable returning
 seconds; default ``time.perf_counter``). ``submit(now=...)`` and
@@ -24,20 +70,44 @@ import heapq
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (
+    Callable, Dict, List, Optional, Sequence, Tuple, Union,
+)
 
 from repro.serving.engine import Request, ServingEngine
+
+# lower rank = higher priority; unknown classes schedule as batch
+SLO_RANK: Dict[str, int] = {"interactive": 0, "batch": 1}
+
+
+class SchedulerError(RuntimeError):
+    """Caller-facing scheduler invariant violation: a request that can
+    never fit any pool member of its tier (rejected at ``submit`` so the
+    deadline-ordered queue can't wedge behind it), or a drain that stopped
+    making progress. A real exception — survives ``python -O``."""
+
+
+def _rank(request: Request) -> int:
+    return SLO_RANK.get(request.slo, SLO_RANK["batch"])
 
 
 @dataclass(order=True)
 class _Item:
-    deadline: float
-    seq: int
+    rank: int                    # SLO class rank (compare key 1)
+    deadline: float              # hard deadline, scheduler clock (key 2)
+    seq: int                     # arrival tiebreak (key 3)
     request: Request = field(compare=False)
     tier: str = field(compare=False, default="edge")
     enqueued_at: float = field(compare=False, default=0.0)
     admitted_at: float = field(compare=False, default=0.0)
-    queue_wait_s: float = field(compare=False, default=0.0)
+    queue_wait_s: float = field(compare=False, default=0.0)   # accumulated
+    resident_s: float = field(compare=False, default=0.0)     # accumulated
+    # ---- preemption/resume state --------------------------------------
+    run_request: Optional[Request] = field(compare=False, default=None)
+    enc: Optional[List[int]] = field(compare=False, default=None)
+    emitted: List[int] = field(compare=False, default_factory=list)
+    preemptions: int = field(compare=False, default=0)
+    last_progress_at: float = field(compare=False, default=0.0)
 
 
 @dataclass
@@ -46,19 +116,53 @@ class Completion:
     text: str
     tier: str
     queue_wait_s: float          # submit -> slot admission (scheduler clock)
-    time_in_engine_s: float      # admission -> finish (scheduler clock)
+    time_in_engine_s: float      # resident time, summed across preemptions
     prompt_tokens: int = 0
     new_tokens: int = 0
-    engine_index: int = 0        # which pool member served it
-    engine_wall_s: float = 0.0   # engine-measured wall time (admit -> finish)
+    engine_index: int = 0        # which pool member finished it
+    engine_wall_s: float = 0.0   # engine-measured wall time (last residency)
+    slo: str = "batch"
+    preemptions: int = 0         # times this request was preempted
+
+
+@dataclass
+class Shed:
+    """Typed terminal outcome for work the scheduler gave up on — the
+    request was NOT served and the caller must decide (fail over to
+    another tier, return an error upstream, ...). Never a silent drop:
+    every Shed is counted and queued on :meth:`TierScheduler.pop_sheds`."""
+    request: Request
+    tier: str
+    reason: str                  # "deadline" | "timeout" | "overload"
+    t: float                     # scheduler-clock time of the shed
+    slo: str = "batch"
+    queue_wait_s: float = 0.0
+    emitted_tokens: int = 0      # tokens generated before a timeout shed
+    preemptions: int = 0
+
+
+_SHED_COUNTER = {"deadline": "shed", "timeout": "timed_out",
+                 "overload": "overload_shed"}
 
 
 class TierScheduler:
-    """Deadline-ordered continuous scheduler over named engine-pool tiers."""
+    """SLO- and deadline-ordered continuous scheduler over named
+    engine-pool tiers, with preemption / shedding / timeouts (see module
+    docstring for the full state machine).
+
+    Defaults preserve pre-overload behavior exactly: ``preempt=True``
+    never fires under a uniform SLO class with monotone deadlines (it
+    requires STRICT priority dominance), and shedding / timeouts /
+    watermarks are opt-in.
+    """
 
     def __init__(self, engines: Dict[str, Union[ServingEngine,
                                                 Sequence[ServingEngine]]],
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None, *,
+                 preempt: bool = True,
+                 shed_overdue: bool = False,
+                 request_timeout_s: Optional[float] = None,
+                 overload_watermark: Optional[float] = None):
         self.pools: Dict[str, List[ServingEngine]] = {}
         for tier, pool in engines.items():
             members = list(pool) if isinstance(pool, (list, tuple)) else [pool]
@@ -68,18 +172,21 @@ class TierScheduler:
         self.engines = engines
         self.clock: Callable[[], float] = (time.perf_counter
                                            if clock is None else clock)
+        self.preempt = preempt
+        self.shed_overdue = shed_overdue
+        self.request_timeout_s = request_timeout_s
+        self.overload_watermark = overload_watermark
         self._queues: Dict[str, List[_Item]] = {t: [] for t in self.pools}
         self._inflight: Dict[Tuple[str, int, int], _Item] = {}
         self._seq = itertools.count()
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "completed": 0, "shed": 0, "timed_out": 0,
+            "overload_shed": 0, "preempted": 0, "resumed": 0}
+        self.sheds: List[Shed] = []
 
-    def submit(self, request: Request, tier: str,
-               deadline_s: float = 1e9, now: Optional[float] = None) -> None:
-        if tier not in self._queues:
-            raise KeyError(f"unknown tier {tier!r}")
-        now = self.clock() if now is None else now
-        heapq.heappush(self._queues[tier],
-                       _Item(deadline_s, next(self._seq), request, tier, now))
-
+    # ------------------------------------------------------------------
+    # Introspection / accounting
+    # ------------------------------------------------------------------
     def pending(self, tier: Optional[str] = None) -> int:
         """Queued requests not yet admitted into a slot."""
         if tier:
@@ -92,49 +199,148 @@ class TierScheduler:
             return sum(t == tier for t, _, _ in self._inflight)
         return len(self._inflight)
 
-    def pump(self, now: Optional[float] = None) -> List[Completion]:
-        """One scheduling round across every tier: fill free slots from the
-        deadline heap, advance each engine one decode step, and return the
+    def capacity(self, tier: str) -> int:
+        """Total slot capacity of a tier's pool."""
+        return sum(e.max_batch for e in self.pools[tier])
+
+    def saturation(self, tier: str) -> float:
+        """Outstanding work over slot capacity: ``(queued + resident) /
+        capacity``. >= 1.0 means every slot is full AND work is queued —
+        the overload watermark and cluster failover key off this."""
+        return (self.pending(tier) + self.in_flight(tier)) / max(
+            self.capacity(tier), 1)
+
+    @property
+    def shed_total(self) -> int:
+        return (self.counters["shed"] + self.counters["timed_out"]
+                + self.counters["overload_shed"])
+
+    def conservation_ok(self) -> bool:
+        """Every submitted request is accounted for: completed, shed (any
+        reason), still queued, or resident. The invariant future PRs must
+        not break — work never silently vanishes."""
+        return self.counters["submitted"] == (
+            self.counters["completed"] + self.shed_total
+            + self.pending() + self.in_flight())
+
+    def pop_sheds(self) -> List[Shed]:
+        """Drain the typed shed outcomes accumulated since the last call
+        (callers that fail work over to another tier consume these)."""
+        out, self.sheds = self.sheds, []
+        return out
+
+    # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
+    def submit(self, request: Request, tier: str,
+               deadline_s: float = 1e9, now: Optional[float] = None) -> None:
+        """Enqueue a request on a tier.
+
+        Raises :class:`SchedulerError` when no pool member could EVER
+        admit the request (prompt too long for every engine's ``max_seq``)
+        — without this, the deadline-ordered queue would wedge behind an
+        inadmissible head and ``drain()`` would spin forever. Batch-class
+        requests are shed immediately (``Shed("overload")``) when the
+        tier's saturation is at/above ``overload_watermark``."""
+        if tier not in self._queues:
+            raise KeyError(f"unknown tier {tier!r}")
+        if not any(e.fits(request) for e in self.pools[tier]):
+            raise SchedulerError(
+                f"request can never be admitted on tier {tier!r}: prompt "
+                f"exceeds every pool member's max_seq "
+                f"({[e.max_seq for e in self.pools[tier]]})")
+        now = self.clock() if now is None else now
+        self.counters["submitted"] += 1
+        item = _Item(_rank(request), deadline_s, next(self._seq), request,
+                     tier, enqueued_at=now, last_progress_at=now)
+        if (self.overload_watermark is not None
+                and item.rank >= SLO_RANK["batch"]
+                and self.saturation(tier) >= self.overload_watermark):
+            self._record_shed(item, "overload", now)
+            return
+        heapq.heappush(self._queues[tier], item)
+
+    # ------------------------------------------------------------------
+    # The pump
+    # ------------------------------------------------------------------
+    def pump(self, now: Optional[float] = None,
+             stalled: Optional[Callable[[str, int], bool]] = None
+             ) -> List[Completion]:
+        """One scheduling round across every tier: shed overdue queued
+        work, time out stuck residents, fill free slots from the priority
+        heap (preempting strictly-lower-priority residents for a head that
+        fits nowhere), advance each engine one decode step, and return the
         requests that finished this round.
 
-        Admission asks the engines via ``can_admit`` — a free slot AND, for
-        a paged KV-cache, enough free pages for the request's prompt +
-        decode budget. Admission stays strictly deadline-ordered: if the
-        head request doesn't fit on ANY pool member, later (larger-deadline)
-        requests wait behind it rather than jumping the queue, so a big
-        request can't be starved by a stream of small ones.
+        Admission asks the engines via ``can_admit`` — a free slot AND,
+        for a paged KV-cache, enough free pages for the request's prompt +
+        decode budget. Admission stays strictly priority-ordered within a
+        tier (see module docstring for the queue key).
 
-        ``now`` pins the whole round to one logical timestamp (simulators);
-        without it the injected clock is read as events happen, so wall-mode
-        completions still include the round's measured compute."""
+        ``now`` pins the whole round to one logical timestamp
+        (simulators); without it the injected clock is read as events
+        happen, so wall-mode completions still include the round's
+        measured compute. ``stalled(tier, engine_index) -> bool`` marks
+        pool members the fault layer has frozen: they are skipped for
+        admission and stepping this round, their residents accrue no
+        progress, and — with ``request_timeout_s`` — eventually time out
+        and free their slots."""
         t_round = self.clock() if now is None else now
         out: List[Completion] = []
         for tier, pool in self.pools.items():
             q = self._queues[tier]
+
+            def is_stalled(i: int, _tier: str = tier) -> bool:
+                return stalled is not None and bool(stalled(_tier, i))
+
+            if self.shed_overdue:
+                self._shed_overdue_queued(q, t_round)
+            if self.request_timeout_s is not None:
+                self._timeout_stuck(tier, pool, t_round)
             while q:
-                eng_i = next((i for i, e in enumerate(pool)
-                              if e.can_admit(q[0].request)), None)
+                head = q[0]
+                run_req = self._run_request(head)
+                eng_i = next(
+                    (i for i, e in enumerate(pool)
+                     if not is_stalled(i) and e.can_admit(run_req)), None)
                 if eng_i is None:
+                    if self.preempt and self._preempt_for(tier, pool, head,
+                                                          t_round):
+                        continue      # a slot/pages just freed; retry head
                     break
                 item = heapq.heappop(q)
-                item.queue_wait_s = max(t_round - item.enqueued_at, 0.0)
+                item.queue_wait_s += max(t_round - item.enqueued_at, 0.0)
                 item.admitted_at = t_round
-                rid = pool[eng_i].admit(item.request)
+                item.last_progress_at = t_round
+                rid = pool[eng_i].admit(run_req)
+                if item.emitted or item.preemptions:
+                    self.counters["resumed"] += 1
                 self._inflight[(tier, eng_i, rid)] = item
             for eng_i, eng in enumerate(pool):
-                if not eng.has_active:
+                if is_stalled(eng_i) or not eng.has_active:
                     continue
                 for ec in eng.step():
                     item = self._inflight.pop((tier, eng_i, ec.req_id))
                     t_done = self.clock() if now is None else now
+                    ids = item.emitted + ec.token_ids
+                    self.counters["completed"] += 1
                     out.append(Completion(
-                        request=item.request, text=ec.text, tier=tier,
+                        request=item.request,
+                        text=eng.tok.decode(ids), tier=tier,
                         queue_wait_s=item.queue_wait_s,
-                        time_in_engine_s=max(t_done - item.admitted_at, 0.0),
-                        prompt_tokens=ec.prompt_tokens,
-                        new_tokens=ec.new_tokens,
+                        time_in_engine_s=item.resident_s
+                        + max(t_done - item.admitted_at, 0.0),
+                        prompt_tokens=(len(item.enc) if item.enc is not None
+                                       else ec.prompt_tokens),
+                        new_tokens=len(ids),
                         engine_index=eng_i,
-                        engine_wall_s=ec.time_in_engine_s))
+                        engine_wall_s=ec.time_in_engine_s,
+                        slo=item.request.slo,
+                        preemptions=item.preemptions))
+                # residents on an engine that just stepped made progress
+                for key, it in self._inflight.items():
+                    if key[0] == tier and key[1] == eng_i:
+                        it.last_progress_at = t_round
         return out
 
     # one pump used to serve a whole batch; keep the name as an alias for
@@ -142,10 +348,129 @@ class TierScheduler:
     step = pump
 
     def drain(self) -> List[Completion]:
+        """Pump until no work remains. Raises :class:`SchedulerError` if a
+        round makes NO progress (no admission, decode step, completion,
+        shed, or preemption) while work is still outstanding — a wedged
+        scheduler fails loudly instead of spinning forever."""
         out: List[Completion] = []
         while self.pending() or self.in_flight():
+            before = self._progress_fingerprint()
             out.extend(self.pump())
+            if (self._progress_fingerprint() == before
+                    and (self.pending() or self.in_flight())):
+                raise SchedulerError(
+                    f"scheduler wedged: {self.pending()} queued, "
+                    f"{self.in_flight()} resident, and a full pump made no "
+                    "progress (no admission, step, completion, shed, or "
+                    "preemption)")
         return out
 
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+    def _progress_fingerprint(self) -> tuple:
+        work = sum(e.prefill_tokens + e.decode_rounds
+                   for pool in self.pools.values() for e in pool)
+        return (self.pending(), self.in_flight(), work,
+                tuple(self.counters.values()))
 
-__all__ = ["TierScheduler", "Completion"]
+    def _run_request(self, item: _Item) -> Request:
+        """The request actually handed to engines: the original on first
+        admission, the resume request (``prompt_ids = enc + emitted``)
+        after a preemption. Kept on the item so engine plan memos stay
+        effective across ``can_admit`` probes."""
+        if item.run_request is None:
+            item.run_request = item.request
+        return item.run_request
+
+    def _record_shed(self, item: _Item, reason: str, now: float,
+                     queued: bool = True) -> None:
+        self.counters[_SHED_COUNTER[reason]] += 1
+        wait = item.queue_wait_s
+        if queued:
+            wait += max(now - item.enqueued_at, 0.0)
+        self.sheds.append(Shed(
+            request=item.request, tier=item.tier, reason=reason, t=now,
+            slo=item.request.slo, queue_wait_s=wait,
+            emitted_tokens=len(item.emitted),
+            preemptions=item.preemptions))
+
+    def _shed_overdue_queued(self, q: List[_Item], now: float) -> None:
+        """Drop queued items whose hard deadline already passed — they can
+        no longer meet their SLO, so capacity goes to ones that can. Only
+        QUEUED work sheds on deadline; residents hold reserved pages and
+        finishing them is cheaper than wasting the work (they time out via
+        ``request_timeout_s`` if truly stuck)."""
+        if not any(it.deadline <= now for it in q):
+            return
+        keep = [it for it in q if it.deadline > now]
+        dead = [it for it in q if it.deadline <= now]
+        q[:] = keep
+        heapq.heapify(q)
+        for it in dead:
+            self._record_shed(it, "deadline", now)
+
+    def _timeout_stuck(self, tier: str, pool: List[ServingEngine],
+                       now: float) -> None:
+        """Reclaim residents whose engine made no progress for
+        ``request_timeout_s`` (stalled engine / wedged decode): preempt
+        them off the engine — host-side bookkeeping that works even when
+        the engine itself is frozen — and emit ``Shed("timeout")``."""
+        for key in [k for k in self._inflight if k[0] == tier]:
+            it = self._inflight[key]
+            if now - it.last_progress_at <= self.request_timeout_s:
+                continue
+            _, eng_i, rid = key
+            snap = pool[eng_i].preempt(rid)
+            del self._inflight[key]
+            it.resident_s += max(now - it.admitted_at, 0.0)
+            it.emitted.extend(snap.emitted_ids)
+            self._record_shed(it, "timeout", now, queued=False)
+
+    def _preempt_for(self, tier: str, pool: List[ServingEngine],
+                     head: _Item, now: float) -> bool:
+        """Reclaim a slot for a queued head that fits nowhere: pick the
+        WORST resident of the tier — largest ``(rank, deadline)`` — and
+        preempt it iff it is STRICTLY lower priority than the head.
+        The victim's snapshot (emitted tokens) folds into its item and it
+        re-enters the queue; its next admission resumes via the prefix
+        cache (original prompt pages are still indexed) and recomputes
+        only the generated suffix, token-identical under greedy decode.
+        Returns True when a victim was reclaimed (the caller retries
+        admission), False when nobody is strictly below the head."""
+        head_key = (head.rank, head.deadline)
+        worst_key: Optional[Tuple[int, float]] = None
+        worst: Optional[Tuple[Tuple[str, int, int], _Item]] = None
+        for key, it in self._inflight.items():
+            if key[0] != tier:
+                continue
+            k = (it.rank, it.deadline)
+            if k <= head_key:
+                continue
+            if worst_key is None or k > worst_key:
+                worst_key, worst = k, (key, it)
+        if worst is None:
+            return False
+        (_, eng_i, rid), it = worst
+        snap = pool[eng_i].preempt(rid)
+        del self._inflight[(tier, eng_i, rid)]
+        if it.enc is None:
+            it.enc = list(snap.prompt_ids)    # original prompt encoding
+        it.emitted.extend(snap.emitted_ids)
+        it.preemptions += 1
+        it.resident_s += max(now - it.admitted_at, 0.0)
+        it.enqueued_at = now
+        it.last_progress_at = now
+        it.run_request = Request(
+            prompt=it.request.prompt,
+            prompt_ids=it.enc + it.emitted,
+            max_new_tokens=it.request.max_new_tokens - len(it.emitted),
+            temperature=it.request.temperature,
+            slo=it.request.slo)
+        heapq.heappush(self._queues[tier], it)
+        self.counters["preempted"] += 1
+        return True
+
+
+__all__ = ["TierScheduler", "Completion", "Shed", "SchedulerError",
+           "SLO_RANK"]

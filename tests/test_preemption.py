@@ -1,0 +1,375 @@
+"""Overload robustness: the preemption lifecycle, typed shed / timeout
+outcomes, submit-time rejection of never-fitting work, prefix-cache
+invalidation on knowledge rotation, and cluster-level failover under
+injected faults.
+
+Every guard exercised here is a real exception or typed outcome — this
+file is part of the ``make test-opt`` lane and must pass under
+``python -O`` (no load-bearing asserts in library code).
+"""
+import pytest
+
+from repro.cluster.faults import FaultConfig, FaultInjector
+from repro.cluster.simulator import EACOCluster, SimConfig
+from repro.core.clock import VirtualClock
+from repro.data.corpus import wiki_like
+from repro.serving.engine import (
+    EngineError, Request, make_edge_engine,
+)
+from repro.serving.scheduler import SchedulerError, Shed, TierScheduler
+
+
+# ---------------------------------------------------------------------------
+# helpers / fixtures
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def corpus():
+    return wiki_like(seed=0)
+
+
+def _serve_ids(eng, request):
+    """Serve one request on an idle engine, returning its token ids."""
+    rid = eng.admit(request)
+    done = {}
+    while eng.has_active:
+        for ec in eng.step():
+            done[ec.req_id] = ec.token_ids
+    return done[rid]
+
+
+def _cluster_cfg(**kw):
+    base = dict(seed=0, n_edges=3, warmup_steps=2, n_edge_engines=1,
+                edge_max_seq=128, edge_max_batch=2, cloud_max_seq=128,
+                cloud_max_batch=2, max_new_slm=8, max_new_graph=12,
+                mean_arrivals=1.2, max_arrivals=3)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# engine level: preempt() frees everything and snapshots enough to resume
+# ---------------------------------------------------------------------------
+def test_preempt_restores_page_accounting_exactly():
+    eng = make_edge_engine(max_seq=64, max_batch=2, seed=0)
+    ra = eng.admit(Request("alpha context words for request a", max_new_tokens=8))
+    rb = eng.admit(Request("beta context words for request b!", max_new_tokens=8))
+    for _ in range(3):
+        eng.step()
+    snap = eng.preempt(ra)
+    assert snap.req_id == ra and len(snap.emitted_ids) == 3
+    assert snap.budget_left == 8 - len(snap.emitted_ids)
+    assert eng.free_slots == 1
+    eng.preempt(rb)
+    # both residents reclaimed: every page is free or parked in the LRU
+    # cache (refcount 0), none leaked
+    assert eng.free_slots == eng.max_batch and not eng.has_active
+    assert eng.available_pages == eng.num_pages
+    assert all(eng._allocator.refcount(p) == 0
+               for p in range(1, eng.num_pages + 1))
+    assert eng.preemptions == 2
+    # engine still serves fresh work after the reclaim
+    texts, _ = eng.generate([Request("gamma words", max_new_tokens=4)])
+    assert len(texts) == 1
+
+
+def test_preempt_unknown_req_id_raises():
+    eng = make_edge_engine(max_seq=64, max_batch=1, seed=0)
+    with pytest.raises(EngineError):
+        eng.preempt(12345)
+
+
+def test_preempt_resume_token_identical():
+    prompt = "Context: some shared retrieval text. Question: what follows?"
+    budget = 12
+    ref = make_edge_engine(max_seq=96, max_batch=1, seed=0)
+    want = _serve_ids(ref, Request(prompt, max_new_tokens=budget))
+    assert len(want) > 4
+
+    eng = make_edge_engine(max_seq=96, max_batch=1, seed=0)
+    rid = eng.admit(Request(prompt, max_new_tokens=budget))
+    for _ in range(4):
+        eng.step()
+    snap = eng.preempt(rid)
+    assert 0 < len(snap.emitted_ids) < budget
+    assert snap.prompt_ids == eng.tok.encode(prompt)
+    # resume = new admission of prompt + emitted, with the leftover budget;
+    # the prefix cache serves the original prompt pages
+    h0 = eng.prefix_hits
+    resume = Request(prompt, max_new_tokens=snap.budget_left,
+                     prompt_ids=snap.prompt_ids + snap.emitted_ids)
+    tail = _serve_ids(eng, resume)
+    assert eng.prefix_hits == h0 + 1
+    assert snap.emitted_ids + tail == want
+
+
+# ---------------------------------------------------------------------------
+# engine level: feasibility is explicit, never a silent truncation
+# ---------------------------------------------------------------------------
+def test_engine_rejects_unfittable_prompt():
+    eng = make_edge_engine(max_seq=64, max_batch=1, seed=0)
+    big = Request("x" * 200, max_new_tokens=4)
+    assert not eng.fits(big)
+    assert not eng.can_admit(big)
+    with pytest.raises(EngineError):
+        eng.admit(big)
+    with pytest.raises(EngineError):
+        eng.generate([big])
+
+
+# ---------------------------------------------------------------------------
+# scheduler level: the overload state machine
+# ---------------------------------------------------------------------------
+def test_scheduler_rejects_unfittable_at_submit():
+    eng = make_edge_engine(max_seq=64, max_batch=1, seed=0)
+    sched = TierScheduler({"edge": eng})
+    with pytest.raises(SchedulerError):
+        sched.submit(Request("x" * 200, max_new_tokens=4), "edge")
+    # the reject leaves no trace: nothing submitted, drain is a no-op
+    assert sched.counters["submitted"] == 0 and sched.pending() == 0
+    assert sched.drain() == []
+    assert sched.conservation_ok()
+
+
+def test_scheduler_preempts_batch_for_interactive_token_identical():
+    prompts = {
+        "batch": ("a longer background batch job prompt with extra words",
+                  10, "batch"),
+        "inter": ("quick interactive question?", 3, "interactive"),
+    }
+    want = {}
+    for name, (p, n, _slo) in prompts.items():
+        ref = make_edge_engine(max_seq=96, max_batch=1, seed=0)
+        want[name] = ref.tok.decode(_serve_ids(ref, Request(p, max_new_tokens=n)))
+
+    clock = VirtualClock()
+    eng = make_edge_engine(max_seq=96, max_batch=1, seed=0)
+    sched = TierScheduler({"edge": eng}, clock=clock)
+    b = Request(*prompts["batch"][:2], slo="batch")
+    sched.submit(b, "edge", deadline_s=1000.0)
+    for _ in range(3):            # admit + decode a few rounds
+        sched.pump()
+    assert sched.in_flight() == 1
+    i = Request(*prompts["inter"][:2], slo="interactive")
+    sched.submit(i, "edge", deadline_s=5.0)
+    done = {}
+    while sched.pending() or sched.in_flight():
+        for c in sched.pump():
+            done[c.request.prompt] = c
+        clock.advance(0.01)
+    assert sched.counters["preempted"] == 1
+    assert sched.counters["resumed"] == 1
+    cb, ci = done[b.prompt], done[i.prompt]
+    assert ci.preemptions == 0 and cb.preemptions == 1
+    assert ci.slo == "interactive" and cb.slo == "batch"
+    # the victim's resumed output is token-identical to an uninterrupted run
+    assert cb.text == want["batch"] and ci.text == want["inter"]
+    assert cb.new_tokens == prompts["batch"][1]
+    assert sched.conservation_ok()
+    # pages fully recycled after the preempt/resume churn
+    assert eng.available_pages == eng.num_pages
+
+
+def test_uniform_slo_never_preempts():
+    clock = VirtualClock()
+    eng = make_edge_engine(max_seq=96, max_batch=1, seed=0)
+    sched = TierScheduler({"edge": eng}, clock=clock)
+    for k in range(3):
+        sched.submit(Request(f"request number {k}", max_new_tokens=4),
+                     "edge", deadline_s=clock.now() + 100.0)
+    done = sched.drain()
+    assert len(done) == 3
+    assert sched.counters["preempted"] == 0
+    assert all(c.preemptions == 0 for c in done)
+
+
+def test_shed_overdue_is_typed_not_silent():
+    clock = VirtualClock()
+    eng = make_edge_engine(max_seq=64, max_batch=1, seed=0)
+    sched = TierScheduler({"edge": eng}, clock=clock, shed_overdue=True)
+    sched.submit(Request("resident request words", max_new_tokens=6),
+                 "edge", deadline_s=50.0)
+    sched.pump()                  # resident admitted, slot now full
+    late = Request("will be overdue", max_new_tokens=4, slo="interactive")
+    sched.submit(late, "edge", deadline_s=1.0)
+    clock.advance(2.0)            # deadline passes while queued
+    sched.pump()
+    sheds = sched.pop_sheds()
+    assert len(sheds) == 1 and isinstance(sheds[0], Shed)
+    assert sheds[0].reason == "deadline" and sheds[0].request is late
+    assert sheds[0].slo == "interactive"
+    assert sheds[0].queue_wait_s == pytest.approx(2.0)
+    assert sched.counters["shed"] == 1
+    assert sched.pop_sheds() == []          # drained
+    done = sched.drain()                    # resident still finishes
+    assert len(done) == 1
+    assert sched.conservation_ok()
+
+
+def test_timeout_reclaims_stuck_resident():
+    clock = VirtualClock()
+    eng = make_edge_engine(max_seq=64, max_batch=1, seed=0)
+    sched = TierScheduler({"edge": eng}, clock=clock, request_timeout_s=1.0)
+    sched.submit(Request("gets stuck on a frozen engine", max_new_tokens=8),
+                 "edge", deadline_s=1e9)
+    sched.pump()                  # admitted, one healthy decode step
+    assert sched.in_flight() == 1
+    clock.advance(5.0)            # engine frozen past the timeout
+    sched.pump(stalled=lambda tier, i: True)
+    sheds = sched.pop_sheds()
+    assert [s.reason for s in sheds] == ["timeout"]
+    assert sheds[0].emitted_tokens > 0      # partial work is reported
+    # slot and pages reclaimed even though the engine itself was "frozen"
+    assert sched.in_flight() == 0 and not eng.has_active
+    assert eng.available_pages == eng.num_pages
+    assert sched.counters["timed_out"] == 1
+    assert sched.conservation_ok()
+
+
+def test_overload_watermark_sheds_batch_keeps_interactive():
+    clock = VirtualClock()
+    eng = make_edge_engine(max_seq=64, max_batch=1, seed=0)
+    sched = TierScheduler({"edge": eng}, clock=clock, overload_watermark=1.0)
+    r1 = Request("first batch request", max_new_tokens=2, slo="batch")
+    r2 = Request("second batch request", max_new_tokens=2, slo="batch")
+    r3 = Request("interactive request", max_new_tokens=2, slo="interactive")
+    sched.submit(r1, "edge")              # saturation 0 -> 1.0
+    sched.submit(r2, "edge")              # at watermark: batch sheds
+    sched.submit(r3, "edge")              # interactive always enqueues
+    sheds = sched.pop_sheds()
+    assert [s.reason for s in sheds] == ["overload"]
+    assert sheds[0].request is r2
+    done = sched.drain()
+    assert {c.request.prompt for c in done} == {r1.prompt, r3.prompt}
+    assert sched.counters["overload_shed"] == 1
+    assert sched.conservation_ok()
+
+
+def test_drain_wedge_raises_typed_error(monkeypatch):
+    eng = make_edge_engine(max_seq=64, max_batch=1, seed=0)
+    sched = TierScheduler({"edge": eng}, preempt=False)
+    sched.submit(Request("fine request", max_new_tokens=2), "edge")
+    monkeypatch.setattr(eng, "can_admit", lambda r: False)
+    with pytest.raises(SchedulerError):
+        sched.drain()
+
+
+def test_mixed_slo_overload_conserves_every_request():
+    clock = VirtualClock()
+    eng = make_edge_engine(max_seq=96, max_batch=2, seed=0)
+    sched = TierScheduler({"edge": eng}, clock=clock, shed_overdue=True)
+    n = 12
+    for k in range(n):
+        slo = "interactive" if k % 3 == 0 else "batch"
+        slack = 0.5 if slo == "interactive" else 50.0
+        sched.submit(
+            Request(f"request {k} " + "pad " * (k % 4),
+                    max_new_tokens=4 + k % 5, slo=slo),
+            "edge", deadline_s=clock.now() + slack)
+    done = []
+    while sched.pending() or sched.in_flight():
+        done.extend(sched.pump())
+        clock.advance(0.11)
+    assert sched.conservation_ok()
+    assert sched.counters["submitted"] == n
+    assert len(done) + sched.shed_total == n
+    assert len(done) == sched.counters["completed"]
+    # every shed is typed; nothing vanished silently
+    assert all(s.reason in ("deadline", "timeout", "overload")
+               for s in sched.pop_sheds())
+    assert eng.available_pages == eng.num_pages
+
+
+# ---------------------------------------------------------------------------
+# prefix invalidation: knowledge rotation must not serve stale pages
+# ---------------------------------------------------------------------------
+def test_prefix_invalidation_forces_full_recompute():
+    eng = make_edge_engine(max_seq=128, max_batch=2, seed=0)
+    prompt = ("Context: a shared retrieved context block that spans "
+              "several KV pages of this engine. Question: and so?")
+    req = lambda: Request(prompt, max_new_tokens=4)  # noqa: E731
+    want, _ = eng.generate([req()])
+    h0 = eng.prefix_hits
+    eng.generate([req()])
+    assert eng.prefix_hits == h0 + 1        # warm cache serves the prefix
+
+    dropped = eng.invalidate_prefix_cache()
+    assert dropped > 0
+    m0, ft0 = eng.prefix_misses, eng.prefill_tokens
+    got, _ = eng.generate([req()])
+    # post-invalidation: a full-prompt miss — every token re-prefills
+    assert eng.prefix_misses == m0 + 1
+    assert eng.prefill_tokens - ft0 == len(eng.tok.encode(prompt))
+    assert got == want                      # same weights -> same answer
+    # and the recomputed pages are cacheable again
+    h1 = eng.prefix_hits
+    eng.generate([req()])
+    assert eng.prefix_hits == h1 + 1
+
+
+def test_invalidate_prefix_cache_noop_without_prefix():
+    eng = make_edge_engine(max_seq=64, max_batch=1, seed=0,
+                           prefix_cache=False)
+    assert eng.invalidate_prefix_cache() == 0
+
+
+# ---------------------------------------------------------------------------
+# cluster level: failover, knowledge-update invalidation, fault injection
+# ---------------------------------------------------------------------------
+def test_cluster_watermark_fails_over_to_cloud(corpus):
+    cfg = _cluster_cfg(overload_watermark=0.0)   # edge always "saturated"
+    sim = EACOCluster(corpus, cfg, policy="fixed:0", backend="engines")
+    sim.run(4)
+    assert sim.logs
+    assert all(l.tier == "cloud" for l in sim.logs)
+    assert all(l.rerouted for l in sim.logs)
+    assert sim.counters["failed_over"] >= len(sim.logs)
+    assert sim.conservation_ok()
+    assert not sim._pending and not sim._retries
+
+
+def test_cluster_knowledge_update_invalidates_edge_prefix(corpus):
+    cfg = _cluster_cfg(update_trigger=2, warmup_steps=1)
+    sim = EACOCluster(corpus, cfg, policy="fixed:1", backend="engines")
+    calls = {"n": 0}
+    for e in sim.sched.pools["edge"]:
+        orig = e.invalidate_prefix_cache
+
+        def spy(_orig=orig):
+            calls["n"] += 1
+            return _orig()
+
+        e.invalidate_prefix_cache = spy
+    sim.run(6)
+    assert sim.counters["prefix_invalidations"] > 0
+    assert calls["n"] >= sim.counters["prefix_invalidations"]
+    assert sim.conservation_ok()
+
+
+def test_cluster_survives_faults_with_typed_outcomes(corpus):
+    faults = FaultInjector(FaultConfig(
+        stall_period_s=2.0, stall_duration_s=0.5,
+        net_spike_period_s=3.0, net_spike_duration_s=0.5,
+        net_spike_extra_s=0.2, drop_completion_p=0.3, seed=1))
+    cfg = _cluster_cfg(request_timeout_s=3.0)
+    sim = EACOCluster(corpus, cfg, backend="engines", faults=faults)
+    sim.run(6)
+    # graceful degradation: the loop finishes, every query has a typed
+    # terminal outcome, and the books balance
+    assert sim.conservation_ok()
+    assert not sim._pending and not sim._retries
+    c = sim.counters
+    assert c["submitted"] == c["completed"] + c["shed"] + c["failed"]
+    assert c["dropped_completions"] == faults.dropped
+    assert c["retries"] >= 1                # seed chosen so faults do bite
+    assert all(l.outcome in ("ok", "shed", "failed") for l in sim.logs)
+    m = sim.metrics()
+    assert m["counters"]["submitted"] == c["submitted"]
+
+
+def test_cluster_conservation_default_config(corpus):
+    sim = EACOCluster(corpus, _cluster_cfg(), backend="engines")
+    sim.run(4)
+    assert sim.conservation_ok()
+    c = sim.counters
+    assert c["submitted"] == c["completed"]       # no knobs -> no sheds
+    assert c["shed"] == c["failed"] == c["failed_over"] == 0
