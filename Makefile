@@ -3,22 +3,29 @@ PY ?= python
 export PYTHONPATH := src:.
 
 .PHONY: test test-opt bench-smoke bench-serving bench-serving-smoke \
-	bench-kernels bench-cluster-smoke bench-overload-smoke bench-overload
+	bench-kernels bench-cluster-smoke bench-overload-smoke bench-overload \
+	bench-chaos-smoke bench-chaos
 
 test:
 	$(PY) -m pytest -x -q
 
 # the guard-path tests under python -O: bare asserts are stripped there, so
-# this lane proves the engine/scheduler guards are real exceptions
+# this lane proves the engine/scheduler guards are real exceptions. The
+# fault-injection tests repeat under three hash seeds: crash/partition
+# recovery must not lean on dict/set iteration order
 test-opt:
 	$(PY) -O -m pytest tests/test_scheduler.py tests/test_cluster_engines.py \
-		tests/test_preemption.py -q
+		tests/test_preemption.py tests/test_faults.py -q
+	for s in 1 2 3; do \
+		PYTHONHASHSEED=$$s $(PY) -O -m pytest tests/test_faults.py \
+			tests/test_crash_recovery.py -q || exit 1; \
+	done
 
 # tiny-size benchmark smoke: serving (static vs continuous + paged vs
 # contiguous + prefix-cache scenarios) + kernels + closed-loop cluster +
 # overload robustness
 bench-smoke: bench-kernels bench-serving-smoke bench-cluster-smoke \
-	bench-overload-smoke
+	bench-overload-smoke bench-chaos-smoke
 
 # serving benchmark smoke (tiny config, prefix scenario included); leaves a
 # JSON artifact at results/benchmarks/serving_bench.json for CI to upload
@@ -55,3 +62,17 @@ bench-overload-smoke:
 # full-size overload benchmark with the same gates
 bench-overload:
 	$(PY) benchmarks/overload_bench.py --check
+
+# chaos smoke: engine crash/restart + pinned flaky node + stall spikes +
+# cluster-level crash/partition run. Gates: crash-and-restart loses zero
+# requests (token-identical re-serves), the breaker bounds post-crash p95
+# and cuts requeue churn vs no-breaker, hedging cuts tail p99 under
+# spikes, no unflagged stale-epoch completions, anti-entropy runs on
+# partition heal, and the gate never selects a masked arm. Leaves
+# results/benchmarks/chaos_bench.json for CI to upload
+bench-chaos-smoke:
+	$(PY) benchmarks/chaos_bench.py --smoke --check
+
+# full-size chaos benchmark with the same gates
+bench-chaos:
+	$(PY) benchmarks/chaos_bench.py --check

@@ -1,0 +1,469 @@
+"""Chaos benchmark: crash/recovery, circuit breakers, hedging and
+epoch-versioned knowledge under injected hard failures.
+
+Where ``overload_bench`` stresses the scheduler with too much WORK, this
+bench stresses it with broken MACHINES: engines that crash (losing all
+device state), one pinned flaky pool member, stall spikes, and an
+edge<->cloud partition — all driven by the deterministic
+:class:`~repro.cluster.faults.FaultInjector` schedules on one virtual
+clock, so every case replays bit-identically per seed.
+
+Cases:
+
+1. ``crash-requeue`` — a 2-engine edge pool with a rotating crash/restart
+   schedule, ``requeue_lost=True``. Residents that die with their engine
+   are re-enqueued (banked tokens ride the prefix-cache resume path) and
+   re-served after restart.
+2. ``flaky-breaker`` / ``flaky-nobreaker`` — the SAME pinned-flaky-node
+   schedule (``crash_rotate=False``: engine 0 crashes every cycle) with
+   and without the per-engine circuit breaker. The breaker quarantines
+   the flaky member after ``threshold`` consecutive losses, so work stops
+   landing on a machine that keeps eating it.
+3. ``spike-hedge`` / ``spike-nohedge`` — an interactive stream through a
+   single edge engine with periodic stall spikes, with and without
+   edge->cloud hedging. Past ``hedge_s`` of no progress a backup fires on
+   the cloud tier; first completion wins, the loser is cancelled.
+4. ``cluster-chaos`` — the full EACO loop (``backend="engines"``) under
+   simultaneous edge crashes AND partitions: typed engine_lost sheds flow
+   through failover, tier breakers + hedging route around the damage,
+   knowledge updates due during a partition are deferred (answers flagged
+   ``stale_epoch``) and reconciled by anti-entropy on heal.
+5. ``mask`` — direct SafeOBO sweep: random availability masks across
+   warmup and exploit phases; the gate must never select a masked arm.
+
+``--check`` gates (the crash-tolerance contract):
+  * a crash-and-restart run loses ZERO requests: every submission reaches
+    a completion (token-identical to the uncontended greedy reference) or
+    a typed shed; conservation holds in every case;
+  * the breaker keeps post-crash p95 within the no-breaker baseline and
+    cuts requeue churn;
+  * hedging cuts tail p99 under stall spikes vs the no-hedge baseline;
+  * cluster chaos conserves every query, crashes AND restarts engines,
+    runs anti-entropy at least once, and never serves a stale-epoch
+    answer without flagging it (``stale_served`` == flagged log rows);
+  * the gate never selects a masked arm.
+
+Usage:  PYTHONPATH=src:. python benchmarks/chaos_bench.py \
+            [--smoke] [--check] [--seed N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.clock import VirtualClock
+from repro.core.cost_model import (
+    PAPER_CLOUD, PAPER_EDGE, modeled_decode_round_s, modeled_prefill_s,
+)
+from repro.core.safeobo import SafeOBO, SafeOBOConfig
+from repro.cluster.faults import FaultConfig, FaultInjector
+from repro.serving import Request, TierScheduler, make_edge_engine
+
+MAX_SEQ = 128
+MAX_BATCH = 2
+INTERACTIVE_SLO_S = 30.0    # loose: chaos cases measure latency, not sheds
+BATCH_SLO_S = 120.0
+WEDGE_IDLE_S = 30.0         # virtual idle time with zero progress = wedge
+TIER_SPEC = {"edge": PAPER_EDGE, "cloud": PAPER_CLOUD}
+
+
+def chaos_workload(n: int, seed: int, interactive_only: bool = False):
+    """Deterministic request stream: (slo, prompt, max_new) specs."""
+    rng = np.random.default_rng(seed)
+    specs = []
+    for k in range(n):
+        if interactive_only or k % 2 == 0:
+            plen = int(rng.integers(12, 36))
+            new = int(rng.integers(4, 9))
+            slo = "interactive"
+        else:
+            # long-running decodes: these are the residents the crash
+            # windows catch mid-flight (short work slips between windows)
+            plen = int(rng.integers(24, 48))
+            new = int(rng.integers(40, 65))
+            slo = "batch"
+        prompt = f"q{k} " + "".join(rng.choice(list("abcdefgh "), plen))
+        specs.append((slo, prompt, new))
+    return specs
+
+
+def make_requests(specs):
+    return [Request(prompt, max_new_tokens=new, slo=slo)
+            for slo, prompt, new in specs]
+
+
+def arrival_times(specs, span_s: float):
+    """Deterministic arrivals evenly paced over ``span_s`` virtual
+    seconds — long enough for the fault schedules to cycle several times
+    while the stream is in flight (the point of a chaos bench is the
+    overlap of work and failure windows, not raw load)."""
+    dt = span_s / len(specs)
+    return [k * dt for k in range(len(specs))]
+
+
+def run_sched_case(pools, specs, span_s: float, *,
+                   faults=None, crash_schedule: bool = False,
+                   requeue_lost: bool = True,
+                   breaker_threshold=None, breaker_reset_s: float = 30.0,
+                   hedge_s=None):
+    """Drive one chaos case at the scheduler level. The fault injector's
+    crash windows are applied to the real engines each round (crash when a
+    window opens, restart when it closes — mirroring the cluster's
+    ``_apply_fault_transitions``); stall windows go in via the scheduler's
+    ``stalled`` hook. Modeled service time per round is the slowest
+    tier's, exactly as the cluster simulator computes it."""
+    clock = VirtualClock()
+    sched = TierScheduler(pools, clock=clock, preempt=True,
+                          requeue_lost=requeue_lost,
+                          breaker_threshold=breaker_threshold,
+                          breaker_reset_s=breaker_reset_s,
+                          hedge_s=hedge_s, hedge_from="edge",
+                          hedge_to="cloud")
+    reqs = make_requests(specs)
+    arrivals = list(zip(arrival_times(specs, span_s), reqs))
+    slack = {"interactive": INTERACTIVE_SLO_S, "batch": BATCH_SLO_S}
+    index = {id(r): k for k, r in enumerate(reqs)}
+    flat = [(t, i, e) for t, pool in pools.items()
+            for i, e in enumerate(pool)]
+    crashed, n_crashes, n_restarts = set(), 0, 0
+
+    completions, idle_since = [], None
+    while arrivals or sched.pending() or sched.in_flight():
+        now = clock.now()
+        if crash_schedule and faults is not None:
+            for tier, i, e in flat:
+                want_dead = faults.crashed(tier, i, now, len(pools[tier]))
+                if want_dead and not e.dead:
+                    e.crash()
+                    crashed.add((tier, i))
+                    n_crashes += 1
+                elif not want_dead and e.dead and (tier, i) in crashed:
+                    e.restart()
+                    crashed.discard((tier, i))
+                    n_restarts += 1
+        while arrivals and arrivals[0][0] <= now:
+            t_arr, r = arrivals.pop(0)
+            sched.submit(r, "edge", deadline_s=t_arr + slack[r.slo], now=now)
+        stalled = None
+        if faults is not None:
+            def stalled(tier, i, _now=now):        # noqa: E731
+                return faults.stalled(tier, i, _now, len(pools[tier]))
+        pre = [(e.prefill_tokens, e.decode_rounds) for _, _, e in flat]
+        before = (sched.pending(), sched.in_flight(),
+                  tuple(sched.counters.values()))
+        comps = sched.pump(now=now, stalled=stalled)
+        completions.extend(comps)
+        dt = 0.0
+        for (tier, _, e), (p0, r0) in zip(flat, pre):
+            spec = TIER_SPEC[tier]
+            dt = max(dt, modeled_prefill_s(spec, e.prefill_tokens - p0)
+                     + (e.decode_rounds - r0) * modeled_decode_round_s(spec))
+        after = (sched.pending(), sched.in_flight(),
+                 tuple(sched.counters.values()))
+        if dt > 0:
+            clock.advance(dt)
+            idle_since = None
+            continue
+        if after != before:
+            idle_since = None
+            continue
+        # nothing moved: tick through the fault window / idle to the next
+        # arrival; a long plateau with work outstanding is a wedge
+        idle_since = now if idle_since is None else idle_since
+        if now - idle_since > WEDGE_IDLE_S:
+            raise RuntimeError(
+                f"chaos case wedged at t={now:.2f}:\n{sched.debug_state()}")
+        clock.advance(min(max(arrivals[0][0] - now, 0.05), 0.25)
+                      if arrivals else 0.05)
+
+    def lat(c):
+        return c.queue_wait_s + c.time_in_engine_s
+
+    lats = [lat(c) for c in completions]
+    sheds = sched.pop_sheds()
+    return {
+        "completions": completions,
+        "index": index,
+        "conservation": sched.conservation_ok(),
+        "counters": dict(sched.counters),
+        "shed_reasons": sorted({s.reason for s in sheds}),
+        "crashes": n_crashes,
+        "restarts": n_restarts,
+        "p95_s": float(np.percentile(lats, 95)) if lats else float("nan"),
+        "p99_s": float(np.percentile(lats, 99)) if lats else float("nan"),
+        "hedged_wins": sum(c.hedged for c in completions),
+        "makespan_s": clock.now(),
+    }
+
+
+def run_cluster_case(*, smoke: bool, seed: int):
+    """Full EACO loop under simultaneous crashes and partitions."""
+    from repro.cluster.simulator import EACOCluster, SimConfig
+    from repro.data.corpus import wiki_like
+
+    steps = 30 if smoke else 60
+    cfg = SimConfig(
+        seed=seed, n_edges=2, warmup_steps=8, qos_min_acc=0.85,
+        n_edge_engines=2, edge_max_seq=128, edge_max_batch=2,
+        cloud_max_seq=128, cloud_max_batch=2, max_new_slm=8,
+        max_new_graph=12, mean_arrivals=1.5, max_arrivals=4,
+        update_trigger=4, hot_topic_boost=0.3,
+        engine_breaker_threshold=3, breaker_threshold=3,
+        breaker_reset_s=4.0, hedge_s=1.5, failover_max_retries=3)
+    faults = FaultInjector(FaultConfig(
+        crash_period_s=12.0, crash_duration_s=2.0, crash_start_s=5.0,
+        crash_tiers=("edge",),
+        partition_period_s=16.0, partition_duration_s=5.0,
+        partition_start_s=6.0, seed=seed))
+    cluster = EACOCluster(wiki_like(seed=seed), cfg, policy="eaco",
+                          backend="engines", faults=faults)
+    logs = cluster.run(steps)
+    ok = [l for l in logs if l.outcome == "ok"]
+    return {
+        "cluster": cluster,
+        "logs": logs,
+        "conservation": cluster.conservation_ok(),
+        "counters": dict(cluster.counters),
+        "served": len(ok),
+        "dropped": len(logs) - len(ok),
+        "stale_flagged": sum(l.stale_epoch for l in ok),
+        "untyped_outcomes": sorted({l.outcome for l in logs}
+                                   - {"ok", "shed", "failed"}),
+        "final_epoch": cluster.updater.latest_epoch,
+        "unreconciled": sorted(cluster.updater.deferred),
+    }
+
+
+def run_mask_sweep(seed: int, n: int = 300):
+    """The gate must never select a masked arm — random masks across both
+    the warmup (uniform) and exploit (GP posterior) phases."""
+    cfg = SafeOBOConfig(n_arms=4, context_dim=3, warmup_steps=n // 3)
+    obo = SafeOBO(cfg, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    violations = 0
+    for _ in range(n):
+        ctx = rng.random(3).astype(np.float32)
+        mask = rng.random(4) < 0.7
+        if not mask.any():
+            mask[int(rng.integers(4))] = True
+        arm, _ = obo.select(ctx, available=tuple(bool(b) for b in mask))
+        if not mask[arm]:
+            violations += 1
+        obo.update(ctx, arm, cost=float(rng.random()),
+                   delay=float(rng.random()),
+                   accuracy=float(rng.random() > 0.3))
+    return {"selections": n, "violations": violations}
+
+
+def run(quick: bool = False, check: bool = False, seed: int = 0):
+    n = 32 if quick else 80
+    specs = chaos_workload(n, seed)
+    inter_specs = chaos_workload(24 if quick else 48, seed + 1,
+                                 interactive_only=True)
+
+    # shared-seed engine pools: pool members are replicas (same weights),
+    # so completions are comparable against one reference regardless of
+    # which engine — or which restart generation — served them
+    def edge(s=0):
+        return make_edge_engine(max_seq=MAX_SEQ, max_batch=MAX_BATCH, seed=s)
+
+    ref_eng = edge()
+    ref_eng.warmup(len(ref_eng.tok.encode(p))
+                   for _, p, _ in specs + inter_specs)
+    ref_texts, _ = ref_eng.generate(make_requests(specs))
+    ref_eng.invalidate_prefix_cache()
+
+    results, rows = {}, []
+
+    # -- case 1: rotating crash/restart, lost residents requeued --------
+    pools = {"edge": [ref_eng, edge()]}
+    res = run_sched_case(
+        pools, specs, span_s=20.0,
+        faults=FaultInjector(FaultConfig(
+            crash_period_s=6.0, crash_duration_s=1.5, crash_start_s=1.0)),
+        crash_schedule=True, requeue_lost=True)
+    res["mismatched"] = sum(c.text != ref_texts[res["index"][id(c.request)]]
+                            for c in res["completions"])
+    results["crash-requeue"] = res
+    ref_eng.invalidate_prefix_cache()
+
+    # -- case 2: pinned flaky node, breaker vs none ---------------------
+    # fast crash cycling: the breaker trips after its first two losses
+    # and sits out the remaining windows the no-breaker run keeps losing
+    # residents to
+    # crash_start_s is offset off the 0.5s arrival grid so the windows
+    # open mid-service (a batch decode runs ~0.6s modeled) and catch the
+    # flaky member with residents
+    def flaky_faults():
+        return FaultInjector(FaultConfig(
+            crash_period_s=3.0, crash_duration_s=1.0, crash_start_s=0.8,
+            crash_rotate=False))
+
+    # tight arrival pacing keeps the flaky member busy, so every crash
+    # window catches residents: without the breaker the scheduler keeps
+    # feeding a machine that keeps eating its work. Threshold 1 because
+    # the breaker counts CONSECUTIVE failures and the flaky engine
+    # completes work between windows, resetting a higher threshold
+    for name, thresh in [("flaky-breaker", 1), ("flaky-nobreaker", None)]:
+        pools = {"edge": [edge(), edge()]}
+        results[name] = run_sched_case(
+            pools, specs, span_s=16.0,
+            faults=flaky_faults(), crash_schedule=True,
+            requeue_lost=True, breaker_threshold=thresh,
+            breaker_reset_s=60.0)
+
+    # -- case 3: stall spikes, hedge vs none ----------------------------
+    for name, h in [("spike-hedge", 0.4), ("spike-nohedge", None)]:
+        pools = {"edge": [edge()], "cloud": [edge()]}
+        results[name] = run_sched_case(
+            pools, inter_specs, span_s=24.0,
+            faults=FaultInjector(FaultConfig(
+                stall_period_s=8.0, stall_duration_s=2.5,
+                stall_start_s=2.0, stall_tiers=("edge",))),
+            hedge_s=h)
+
+    # -- case 4 + 5 -----------------------------------------------------
+    results["cluster-chaos"] = run_cluster_case(smoke=quick, seed=seed)
+    results["mask"] = run_mask_sweep(seed)
+
+    for name in ["crash-requeue", "flaky-breaker", "flaky-nobreaker",
+                 "spike-hedge", "spike-nohedge"]:
+        r = results[name]
+        c = r["counters"]
+        rows.append({
+            "name": name,
+            "submitted": c["submitted"],
+            "completed": c["completed"],
+            "engine_lost": c["engine_lost"],
+            "requeued_lost": c["requeued_lost"],
+            "hedged": c["hedged"],
+            "cancelled": c["cancelled"],
+            "crashes": r["crashes"],
+            "restarts": r["restarts"],
+            "p95_s": round(r["p95_s"], 3),
+            "p99_s": round(r["p99_s"], 3),
+            "conservation": r["conservation"],
+            "makespan_s": round(r["makespan_s"], 2),
+        })
+    cc = results["cluster-chaos"]
+    rows.append({
+        "name": "cluster-chaos",
+        "served": cc["served"],
+        "dropped": cc["dropped"],
+        "engine_crashes": cc["counters"]["engine_crashes"],
+        "engine_restarts": cc["counters"]["engine_restarts"],
+        "anti_entropy_syncs": cc["counters"]["anti_entropy_syncs"],
+        "stale_served": cc["counters"]["stale_served"],
+        "hedged_served": cc["counters"]["hedged_served"],
+        "breaker_reroutes": cc["counters"]["breaker_reroutes"],
+        "final_epoch": cc["final_epoch"],
+        "conservation": cc["conservation"],
+    })
+    ms = results["mask"]
+    rows.append({"name": "mask", "selections": ms["selections"],
+                 "violations": ms["violations"]})
+    emit(rows, "chaos_bench")
+
+    if not check:
+        return 0
+
+    failures = []
+
+    def gate(cond, msg):
+        print(f"  [{'PASS' if cond else 'FAIL'}] {msg}")
+        if not cond:
+            failures.append(msg)
+
+    print("chaos gates:")
+    r = results["crash-requeue"]
+    gate(r["crashes"] >= 2 and r["restarts"] >= 2,
+         f"crash-requeue exercises the schedule "
+         f"({r['crashes']} crashes, {r['restarts']} restarts)")
+    gate(r["counters"]["completed"] == r["counters"]["submitted"],
+         f"crash-and-restart loses zero requests "
+         f"({r['counters']['completed']}/{r['counters']['submitted']})")
+    gate(r["counters"]["requeued_lost"] >= 1,
+         f"lost residents were re-enqueued "
+         f"({r['counters']['requeued_lost']})")
+    gate(r["mismatched"] == 0,
+         f"every re-served completion is token-identical to the reference "
+         f"({r['mismatched']} mismatched)")
+    for name in ["crash-requeue", "flaky-breaker", "flaky-nobreaker",
+                 "spike-hedge", "spike-nohedge"]:
+        gate(results[name]["conservation"],
+             f"{name}: hedge-aware conservation holds")
+        lost = (results[name]["counters"]["submitted"]
+                - results[name]["counters"]["completed"]
+                - sum(results[name]["counters"][k] for k in
+                      ("shed", "timed_out", "overload_shed", "engine_lost")))
+        gate(lost == 0, f"{name}: every outcome is typed (0 untracked)")
+
+    b, nb = results["flaky-breaker"], results["flaky-nobreaker"]
+    gate(b["counters"]["completed"] == b["counters"]["submitted"],
+         "flaky-breaker completes the full stream")
+    gate(b["p95_s"] <= nb["p95_s"],
+         f"breaker keeps post-crash p95 within the no-breaker baseline "
+         f"({b['p95_s']:.2f}s vs {nb['p95_s']:.2f}s)")
+    gate(b["counters"]["requeued_lost"] < nb["counters"]["requeued_lost"],
+         f"breaker cuts requeue churn on the flaky node "
+         f"({b['counters']['requeued_lost']} vs "
+         f"{nb['counters']['requeued_lost']})")
+
+    h, nh = results["spike-hedge"], results["spike-nohedge"]
+    gate(h["counters"]["hedged"] >= 1 and h["hedged_wins"] >= 1,
+         f"hedges fired and won ({h['counters']['hedged']} fired, "
+         f"{h['hedged_wins']} won)")
+    gate(h["p99_s"] < nh["p99_s"],
+         f"hedging cuts tail p99 under spikes "
+         f"({h['p99_s']:.2f}s vs {nh['p99_s']:.2f}s)")
+
+    gate(cc["conservation"], "cluster-chaos: query conservation holds")
+    gate(not cc["untyped_outcomes"],
+         f"cluster-chaos: all terminal outcomes typed "
+         f"({cc['untyped_outcomes'] or 'ok/shed/failed'})")
+    gate(cc["counters"]["engine_crashes"] >= 1
+         and cc["counters"]["engine_restarts"] >= 1,
+         f"cluster-chaos crashes AND restarts engines "
+         f"({cc['counters']['engine_crashes']}/"
+         f"{cc['counters']['engine_restarts']})")
+    gate(cc["counters"]["anti_entropy_syncs"] >= 1,
+         f"partition heal runs anti-entropy "
+         f"({cc['counters']['anti_entropy_syncs']} syncs)")
+    gate(cc["counters"]["stale_served"] == cc["stale_flagged"],
+         f"no unflagged stale-epoch completions "
+         f"({cc['counters']['stale_served']} counted, "
+         f"{cc['stale_flagged']} flagged)")
+    gate(cc["counters"]["stale_served"] >= 1,
+         f"stale-epoch serving occurred and was flagged "
+         f"({cc['counters']['stale_served']})")
+    gate(not cc["unreconciled"],
+         f"every deferred edge reconciled by run end "
+         f"(pending: {cc['unreconciled'] or 'none'})")
+
+    gate(ms["violations"] == 0,
+         f"gate never selects a masked arm "
+         f"({ms['selections']} masked selections checked)")
+
+    if failures:
+        print(f"{len(failures)} gate(s) FAILED")
+        return 1
+    print("all chaos gates passed")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small stream / short cluster run")
+    ap.add_argument("--check", action="store_true",
+                    help="evaluate acceptance gates; exit 1 on failure")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    return run(quick=args.smoke, check=args.check, seed=args.seed)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,10 +21,26 @@ fixed seed — the same property the rest of the cluster keeps
   probability ``drop_completion_p`` (seeded RNG, one draw per completion):
   the caller never sees the result and must treat the request like a shed
   (retry / fail over), exercising the same recovery path as a lost RPC.
+* **Engine crashes** — periodic windows like stalls, but HARD: within each
+  ``crash_period_s`` cycle one pool member of each listed tier is dead for
+  ``crash_duration_s``. The cluster calls :meth:`ServingEngine.crash` on
+  window entry (all device state gone — slots, arena, prefix index) and
+  :meth:`restart` on exit (cold engine, bumped ``engine_generation``);
+  the scheduler reaps the lost residents as typed ``engine_lost``
+  outcomes. ``crash_rotate=False`` pins every crash on pool member 0 —
+  the "one flaky node" pattern circuit breakers exist for.
+* **Partitions** — within each ``partition_period_s`` cycle the
+  edge<->cloud link is down for ``partition_duration_s``: knowledge
+  updates cannot ship (they defer and reconcile via anti-entropy on
+  heal), failover cannot escalate edge->cloud, and the gate's
+  availability mask excludes cloud-dependent arms. Edges keep serving,
+  degraded, with ``stale_epoch`` flags.
 
-The injector never touches engine internals — a "stalled" engine's KV and
-slot state stay intact, which is exactly what makes timeout-preemption
-(host-side bookkeeping) the right recovery tool.
+The stall/spike injectors never touch engine internals — a "stalled"
+engine's KV and slot state stay intact, which is exactly what makes
+timeout-preemption (host-side bookkeeping) the right recovery tool. A
+*crash* is the opposite contract: nothing survives, and recovery is
+restart + re-serve, not preemption.
 """
 from __future__ import annotations
 
@@ -46,6 +62,15 @@ class FaultConfig:
     net_spike_duration_s: float = 0.5
     net_spike_extra_s: float = 0.5
     drop_completion_p: float = 0.0    # 0 disables completion drops
+    # ---- hard failures ------------------------------------------------
+    crash_period_s: float = 0.0       # 0 disables engine crashes
+    crash_duration_s: float = 1.0     # dead window at each cycle start
+    crash_start_s: float = 0.0        # no crashes before this instant
+    crash_tiers: Tuple[str, ...] = ("edge",)
+    crash_rotate: bool = True         # False: member 0 is the flaky node
+    partition_period_s: float = 0.0   # 0 disables edge<->cloud partitions
+    partition_duration_s: float = 1.0
+    partition_start_s: float = 0.0
     seed: int = 0
 
 
@@ -58,6 +83,8 @@ class FaultInjector:
         self.stall_hits = 0       # times a stalled engine was consulted
         self.spiked = 0           # completions that got a delay spike
         self.dropped = 0          # completions dropped
+        self.crash_hits = 0       # times a crashed engine was consulted
+        self.partition_hits = 0   # times a live partition was consulted
 
     def stalled(self, tier: str, engine_index: int, now: float,
                 pool_size: int = 1) -> bool:
@@ -75,6 +102,39 @@ class FaultInjector:
         hit = int(cycle) % max(pool_size, 1) == engine_index
         if hit:
             self.stall_hits += 1
+        return hit
+
+    def crashed(self, tier: str, engine_index: int, now: float,
+                pool_size: int = 1) -> bool:
+        """Should this pool member be DEAD at virtual time ``now``? Same
+        windowing as :meth:`stalled`, but the victim is either rotating
+        (``crash_rotate=True``) or pinned to member 0 (the one flaky node
+        that keeps failing — the case circuit breakers pay for)."""
+        c = self.cfg
+        if c.crash_period_s <= 0 or tier not in c.crash_tiers:
+            return False
+        if now < c.crash_start_s:
+            return False
+        cycle, phase = divmod(now - c.crash_start_s, c.crash_period_s)
+        if phase >= c.crash_duration_s:
+            return False
+        victim = (int(cycle) % max(pool_size, 1)) if c.crash_rotate else 0
+        hit = victim == engine_index
+        if hit:
+            self.crash_hits += 1
+        return hit
+
+    def partitioned(self, now: float) -> bool:
+        """Is the edge<->cloud link down at virtual time ``now``?"""
+        c = self.cfg
+        if c.partition_period_s <= 0:
+            return False
+        if now < c.partition_start_s:
+            return False
+        phase = (now - c.partition_start_s) % c.partition_period_s
+        hit = phase < c.partition_duration_s
+        if hit:
+            self.partition_hits += 1
         return hit
 
     def net_spike(self, now: float) -> float:

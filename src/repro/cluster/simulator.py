@@ -53,8 +53,47 @@ machine sits above the scheduler's preempt/shed/timeout machinery
 * the gate learns only from SERVED completions; terminal drops surface in
   counters/metrics instead of feeding SafeOBO a synthetic reward.
 
-All knobs default off (no shedding, no timeout, no watermark, no faults),
-which reproduces the pre-overload closed loop exactly.
+**Hard-failure model (engines backend).** Crashes, partitions, and the
+health machinery that keeps the loop serving through them:
+
+* *engine crashes* — ``FaultInjector.crashed`` windows call
+  :meth:`ServingEngine.crash` on entry (ALL device state lost: slots,
+  arena, prefix index) and :meth:`restart` on exit (cold engine, bumped
+  ``engine_generation``). The scheduler is built with
+  ``requeue_lost=False`` here, so reaped residents surface as typed
+  ``Shed("engine_lost")`` outcomes and flow through the SAME failover
+  path as any other shed — bounded backoff, edge->cloud escalation,
+  typed terminal outcomes — preserving request conservation. Only
+  schedule-driven crashes are schedule-restarted; an engine a test
+  crashed by hand stays down.
+* *circuit breakers* — two layers. Per-ENGINE breakers inside the
+  scheduler (``engine_breaker_threshold``) stop admission onto a flaky
+  pool member. Per-TIER breakers here (``breaker_threshold``) gate
+  routing: a query bound for a tier whose breaker is open is rerouted to
+  the other tier (``breaker_reroutes``), tier failures/successes feed
+  the breaker from ``_handle_failure``/``_finalize``.
+* *hedging* (``hedge_s``) — the scheduler fires an edge->cloud backup
+  for interactive requests past the latency threshold; first completion
+  wins. A hedged completion served by the cloud pays cloud transit on
+  top of its route (``_finalize``), and hedges are gated off while the
+  link is partitioned.
+* *partitions* — while ``FaultInjector.partitioned`` holds: the gate's
+  arm-availability mask excludes cloud-dependent arms (cloud generation
+  AND GraphRAG retrieval), failover retries stay on the edge instead of
+  escalating, hedges don't fire, and knowledge updates DEFER (epoch
+  advances, nothing ships). Edges keep serving from their last-synced
+  chunk set; edge-RAG completions from a store behind the newest epoch
+  are flagged ``stale_epoch`` — degraded, never silent. On heal,
+  anti-entropy (:meth:`AdaptiveKnowledgeUpdater.sync`) replays deferred
+  refreshes and invalidates edge prefix caches. In-flight cloud work
+  completes across a partition onset (the link model covers the
+  control-plane update path, not queued generations), and fixed:<arm>
+  baseline policies ignore the mask — they are the paper's
+  non-adaptive comparison points.
+
+All knobs default off (no shedding, no timeout, no watermark, no faults,
+no breakers, no hedging), which reproduces the pre-overload closed loop
+exactly.
 """
 from __future__ import annotations
 
@@ -87,6 +126,7 @@ from repro.retrieval.store import VectorStore
 from repro.serving.engine import (
     Request, ServingEngine, make_cloud_engine, make_edge_engine,
 )
+from repro.serving.health import CircuitBreaker
 from repro.serving.scheduler import Completion, TierScheduler
 
 # calibration: the paper uses ~500-token chunks; our synthetic chunks are
@@ -132,6 +172,9 @@ class StepLog:
     slo: str = "interactive"        # SLO class the query was served under
     rerouted: bool = False          # escalated off its nominal tier
     attempts: int = 0               # failover resubmissions before terminal
+    hedged: bool = False            # served by the backup hedge submission
+    epoch: int = 0                  # serving edge's knowledge epoch
+    stale_epoch: bool = False       # edge-RAG answer from a stale epoch
 
 
 @dataclass
@@ -177,6 +220,11 @@ class SimConfig:
     failover_backoff_cap_s: float = 2.0
     drain_timeout_s: float = 300.0  # virtual-s wedge guard while draining
     stall_tick_s: float = 0.05      # idle clock step when faults stall all
+    # ---- hard failures / health (all off by default) -------------------
+    engine_breaker_threshold: Optional[int] = None  # scheduler per-engine
+    breaker_threshold: Optional[int] = None         # cluster per-tier
+    breaker_reset_s: float = 5.0    # open -> half-open probe delay
+    hedge_s: Optional[float] = None  # edge->cloud hedge after this wait
 
 
 @dataclass
@@ -266,14 +314,32 @@ class EACOCluster:
         self.counters: Dict[str, int] = {
             "submitted": 0, "completed": 0, "shed": 0, "failed": 0,
             "failed_over": 0, "retries": 0, "dropped_completions": 0,
-            "prefix_invalidations": 0}
+            "prefix_invalidations": 0, "engine_crashes": 0,
+            "engine_restarts": 0, "breaker_reroutes": 0,
+            "anti_entropy_syncs": 0, "hedged_served": 0,
+            "stale_served": 0}
+        # ---- hard-failure state ----------------------------------------
+        self._link_down = False           # edge<->cloud partition active
+        self._fault_crashed: set = set()  # (tier, i) crashed BY the schedule
+        self.tier_breakers: Dict[str, CircuitBreaker] = {}
+        if backend == "engines" and cfg.breaker_threshold is not None:
+            self.tier_breakers = {
+                t: CircuitBreaker(cfg.breaker_threshold, cfg.breaker_reset_s)
+                for t in ("edge", "cloud")}
         if backend == "engines":
             if engines is None:
                 engines = self.build_engines()
             self.sched = TierScheduler(
                 engines, clock=self.clock, preempt=cfg.preemption,
                 shed_overdue=cfg.shed_overdue,
-                request_timeout_s=cfg.request_timeout_s)
+                request_timeout_s=cfg.request_timeout_s,
+                # crashes surface as typed engine_lost sheds so the
+                # cluster's failover (backoff + escalation) owns recovery
+                requeue_lost=False,
+                breaker_threshold=cfg.engine_breaker_threshold,
+                breaker_reset_s=cfg.breaker_reset_s,
+                hedge_s=cfg.hedge_s, hedge_from="edge", hedge_to="cloud",
+                hedge_gate=lambda now: not self._link_down)
             if set(self.sched.pools) != {"edge", "cloud"}:
                 raise ValueError(
                     f"engines backend needs 'edge' and 'cloud' tiers, got "
@@ -365,9 +431,39 @@ class EACOCluster:
         return QueryContext.analyze(ev.qa.question, d_cloud, d_edge,
                                     sel.overlap, sel.edge_id, edge_index)
 
+    def _arm_mask(self) -> Optional[Tuple[bool, ...]]:
+        """Arm-availability mask from infrastructure health: a partition
+        cuts off every cloud-dependent arm (cloud generation and GraphRAG
+        retrieval both need the link), an open tier breaker cuts off the
+        arms generating on that tier. ``None`` when everything is
+        reachable — which keeps the gate's RNG stream bit-identical to a
+        fault-free run — or when NOTHING is (no usable mask: serve on the
+        nominal route and let failover handle the outcome)."""
+        if self.sched is None:
+            return None
+        now = self.clock.now()
+        edge_b = self.tier_breakers.get("edge")
+        cloud_b = self.tier_breakers.get("cloud")
+        edge_ok = edge_b is None or edge_b.allow(now)
+        cloud_ok = cloud_b is None or cloud_b.allow(now)
+        mask = []
+        for arm in self.gate.arms:
+            ok = True
+            if self._link_down and (arm.generation == "cloud"
+                                    or arm.retrieval == "graph"):
+                ok = False
+            if arm.generation == "cloud" and not cloud_ok:
+                ok = False
+            if arm.generation == "local" and not edge_ok:
+                ok = False
+            mask.append(ok)
+        if all(mask) or not any(mask):
+            return None
+        return tuple(mask)
+
     def _decide(self, qc: QueryContext) -> Tuple[Arm, str]:
         if self.policy == "eaco":
-            decision = self.gate.decide(qc)
+            decision = self.gate.decide(qc, available=self._arm_mask())
             return decision.arm, decision.info.get("phase", "")
         return PAPER_ARMS[int(self.policy.split(":")[1])], "fixed"
 
@@ -401,11 +497,17 @@ class EACOCluster:
         cache is invalidated so a stale retrieved-context prefix can never
         serve a post-update query — the next same-context prompt recomputes
         against the rotated knowledge."""
-        shipped = self.updater.observe_query(
-            ev.edge_id, ev.qa.question, self.stores[ev.edge_id], now=ev.t)
-        if shipped and self.sched is not None:
+        store = self.stores[ev.edge_id]
+        epoch_before = store.epoch
+        self.updater.observe_query(
+            ev.edge_id, ev.qa.question, store, now=ev.t,
+            link_up=not self._link_down)
+        # invalidate only when chunks actually SHIPPED (epoch advanced);
+        # an update deferred behind a partition changes nothing edge-side
+        if store.epoch != epoch_before and self.sched is not None:
             for e in self.sched.pools["edge"]:
-                e.invalidate_prefix_cache()
+                if not e.dead:
+                    e.invalidate_prefix_cache()
             self.counters["prefix_invalidations"] += 1
 
     # ------------------------------------------------------------------
@@ -447,6 +549,21 @@ class EACOCluster:
             rerouted = True
             net_delay += qc.d_cloud          # the re-route pays cloud transit
             self.counters["failed_over"] += 1
+        # tier-breaker reroute: an open breaker sheds the whole tier from
+        # routing; go to the other tier if ITS breaker allows (when both
+        # are open, submit on the nominal tier and let failover recover)
+        other = "cloud" if tier_name == "edge" else "edge"
+        now_b = self.clock.now()
+        b, b_other = (self.tier_breakers.get(tier_name),
+                      self.tier_breakers.get(other))
+        if (b is not None and not b.allow(now_b)
+                and (b_other is None or b_other.allow(now_b))
+                and not (other == "cloud" and self._link_down)):
+            if other == "cloud":
+                net_delay += qc.d_cloud
+            tier_name = other
+            rerouted = True
+            self.counters["breaker_reroutes"] += 1
         max_new = (cfg.max_new_graph if arm.retrieval == "graph"
                    else cfg.max_new_slm)
         max_seq = min(e.max_seq for e in self.sched.pools[tier_name])
@@ -477,6 +594,7 @@ class EACOCluster:
         if self.sched is None:
             raise RuntimeError("pump_engines() requires backend='engines'")
         now = self.clock.now()
+        self._apply_fault_transitions(now)
         self._resubmit_ready(now)
         stalled = None
         if self.faults is not None:
@@ -517,6 +635,50 @@ class EACOCluster:
             self._handle_failure(p, s.reason, t_done)
         return out
 
+    # ---- hard-failure transitions -------------------------------------
+    def _apply_fault_transitions(self, now: float) -> None:
+        """Drive the deterministic crash / partition schedules onto real
+        state: crash engines entering their dead window, restart them on
+        exit (only engines THIS schedule crashed — a manually-crashed
+        engine stays down), and on partition heal run anti-entropy so
+        deferred knowledge updates ship before the next query is served."""
+        if self.faults is None or self.sched is None:
+            return
+        for tier, pool in self.sched.pools.items():
+            for i, e in enumerate(pool):
+                want_dead = self.faults.crashed(tier, i, now, len(pool))
+                if want_dead and not e.dead:
+                    e.crash()
+                    self._fault_crashed.add((tier, i))
+                    self.counters["engine_crashes"] += 1
+                elif (not want_dead and e.dead
+                        and (tier, i) in self._fault_crashed):
+                    e.restart()
+                    self._fault_crashed.discard((tier, i))
+                    self.counters["engine_restarts"] += 1
+        down = self.faults.partitioned(now)
+        if down and not self._link_down:
+            self._link_down = True
+        elif not down and self._link_down:
+            self._link_down = False
+            self._anti_entropy(now)
+
+    def _anti_entropy(self, now: float) -> None:
+        """Partition healed: replay every deferred knowledge update so the
+        affected edges catch up to the newest epoch, and invalidate edge
+        prefix caches (their retrieved-context prefixes may now be built
+        from rotated chunk sets)."""
+        synced_any = False
+        for eid in sorted(self.updater.deferred):
+            if self.updater.sync(eid, self.stores[eid], now=now):
+                synced_any = True
+            self.counters["anti_entropy_syncs"] += 1
+        if synced_any and self.sched is not None:
+            for e in self.sched.pools["edge"]:
+                if not e.dead:
+                    e.invalidate_prefix_cache()
+            self.counters["prefix_invalidations"] += 1
+
     # ---- failover / escalation ----------------------------------------
     def _handle_failure(self, p: _Pending, reason: str, now: float) -> None:
         """A query failed on its current tier (scheduler shed or dropped
@@ -525,6 +687,9 @@ class EACOCluster:
         resubmissions, then record the typed terminal outcome."""
         cfg = self.cfg
         p.last_reason = reason
+        b = self.tier_breakers.get(p.tier_name)
+        if b is not None:
+            b.record_failure(now)
         if p.attempts >= cfg.failover_max_retries:
             outcome = "failed" if reason == "dropped" else "shed"
             self.counters[outcome] += 1
@@ -533,7 +698,9 @@ class EACOCluster:
         backoff = min(cfg.failover_backoff_s * (2.0 ** p.attempts),
                       cfg.failover_backoff_cap_s)
         p.attempts += 1
-        if p.tier_name == "edge":            # escalate to the next tier up
+        # escalate to the next tier up — unless the link is partitioned,
+        # in which case the retry stays on the edge (degraded but serving)
+        if p.tier_name == "edge" and not self._link_down:
             p.tier_name = "cloud"
             p.rerouted = True
             p.net_delay_s += p.qc.d_cloud    # true transit of the new route
@@ -582,9 +749,14 @@ class EACOCluster:
         cost model and the gate see the true cost/delay of the re-route."""
         p = self._pending.pop(id(c.request))
         tier = self.edge_tier if c.tier == "edge" else self.cloud_tier
+        b = self.tier_breakers.get(c.tier)
+        if b is not None:
+            b.record_success(self.clock.now())
         in_t = float(c.prompt_tokens)
         out_t = float(max(c.new_tokens, 1))
         net_delay = p.net_delay_s
+        if c.hedged and c.tier == "cloud" and p.tier_name == "edge":
+            net_delay += p.qc.d_cloud    # true transit of the backup route
         if self.faults is not None:
             net_delay += self.faults.net_spike(self.clock.now())
         delay = (tier.base_delay_s + net_delay
@@ -594,6 +766,12 @@ class EACOCluster:
         cost = total_cost(u_r, u_d, self.weights)
         correct = self.oracle.draw(p.arm.name, hit=p.hit,
                                    multihop=p.ev.qa.multihop)
+        # knowledge-epoch provenance: edge-RAG answers are served from the
+        # edge's chunk set; if that set trails the newest epoch (deferred
+        # update behind a partition) the answer is flagged — never silent
+        store = self.stores[p.ev.edge_id]
+        stale = (p.arm.retrieval == "edge"
+                 and self.updater.is_stale(store))
         log = StepLog(
             t=p.ev.t, edge_id=p.ev.edge_id, arm=p.arm.idx,
             arm_name=p.arm.name, correct=correct, delay=delay, cost=cost,
@@ -601,8 +779,13 @@ class EACOCluster:
             multihop=p.ev.qa.multihop, in_tokens=in_t, out_tokens=out_t,
             phase=p.phase, retrieved=p.texts, tier=c.tier,
             queue_wait_s=c.queue_wait_s, engine_s=c.time_in_engine_s,
-            slo=c.slo, rerouted=p.rerouted, attempts=p.attempts)
+            slo=c.slo, rerouted=p.rerouted, attempts=p.attempts,
+            hedged=c.hedged, epoch=store.epoch, stale_epoch=stale)
         self.counters["completed"] += 1
+        if c.hedged:
+            self.counters["hedged_served"] += 1
+        if stale:
+            self.counters["stale_served"] += 1
         if self.policy == "eaco":
             self.gate.update(p.qc, p.arm, cost=cost,
                              accuracy=1.0 if correct else 0.0, delay=delay)
@@ -646,11 +829,21 @@ class EACOCluster:
                 wedge_at = self.clock.now() + self.cfg.drain_timeout_s
                 continue
             if self.clock.now() >= wedge_at:
+                now_w = self.clock.now()
+                ready = ", ".join(f"{r[0]:.3f}" for r in
+                                  sorted(self._retries)[:8])
+                tb = {t: b.state(now_w)
+                      for t, b in self.tier_breakers.items()}
                 raise RuntimeError(
                     f"cluster wedged: {self.sched.pending()} queued, "
                     f"{self.sched.in_flight()} resident, "
                     f"{len(self._retries)} awaiting retry with no progress "
-                    f"for {self.cfg.drain_timeout_s}s of virtual time")
+                    f"for {self.cfg.drain_timeout_s}s of virtual time\n"
+                    f"now={now_w:.3f} link_down={self._link_down} "
+                    f"tier_breakers={tb or None} "
+                    f"retry_ready_at=[{ready}]\n"
+                    f"cluster_counters={self.counters}\n"
+                    f"{self.sched.debug_state(now_w)}")
             if self.clock.now() > t0:
                 continue      # modeled time moved; let fault windows expire
             # nothing can move until a backoff or stall window expires —

@@ -119,9 +119,17 @@ class CollaborativeGate:
             safe_seed_arm=len(arms) - 1, use_pallas=use_pallas,
         ), seed=seed)
 
-    def decide(self, qc: QueryContext) -> Decision:
+    def decide(self, qc: QueryContext,
+               available: Optional[Tuple[bool, ...]] = None) -> Decision:
+        """Pick an arm. ``available`` masks arms the infrastructure cannot
+        serve right now (open circuit breaker on the backing tier, an
+        edge<->cloud partition cutting off cloud generation): a masked arm
+        is never selected, and because callers also never ``update`` on
+        failed work, infrastructure outages never pollute the GP
+        posterior. ``None`` = all arms reachable (legacy path, identical
+        RNG stream)."""
         ctx = context_features(qc, self.n_edges)
-        idx, info = self.obo.select(ctx)
+        idx, info = self.obo.select(ctx, available=available)
         return Decision(self.arms[idx], info)
 
     def update(self, qc: QueryContext, arm: Arm, *, cost: float,

@@ -7,6 +7,16 @@ The cloud accumulates recent QA traffic per edge node; every
   3. ships up to ``max_chunks_per_update`` (=500) chunks from the top-k
      communities to the edge store, which applies FIFO eviction
      (capacity 1000).
+
+**Knowledge epochs** (partition tolerance): every triggered update —
+shipped or not — bumps the updater's monotone ``latest_epoch``; a
+successful ship stamps the target store's ``epoch`` to match. When the
+edge<->cloud link is down (``link_up=False``) the update is DEFERRED: the
+edge keeps serving from its old chunk set, its answers flagged
+``stale_epoch`` (:meth:`is_stale`), until :meth:`sync` — anti-entropy on
+partition heal — replays the pending refresh and catches the store up to
+the newest epoch. Availability beats freshness; staleness is never
+silent.
 """
 from __future__ import annotations
 
@@ -30,6 +40,8 @@ class UpdateStats:
     updates: int = 0
     chunks_shipped: int = 0
     chunks_evicted: int = 0
+    deferred: int = 0             # updates blocked by a partition
+    synced: int = 0               # anti-entropy reconciliations on heal
 
 
 class AdaptiveKnowledgeUpdater:
@@ -42,11 +54,15 @@ class AdaptiveKnowledgeUpdater:
         self._pending: Dict[str, List[str]] = {}
         self._recent: Dict[str, List[str]] = {}
         self.stats: Dict[str, UpdateStats] = {}
+        self.latest_epoch = 0             # newest knowledge version, monotone
+        self.deferred: set = set()        # edges owed an update (partition)
 
     def observe_query(self, edge_id: str, query: str,
-                      store: VectorStore, now: float = 0.0) -> bool:
+                      store: VectorStore, now: float = 0.0,
+                      link_up: bool = True) -> bool:
         """Record one served QA pair; trigger an update when due.
-        Returns True if an update was shipped."""
+        Returns True if an update became due (it ships immediately when
+        ``link_up``, otherwise defers until :meth:`sync`)."""
         self._pending.setdefault(edge_id, []).append(query)
         rec = self._recent.setdefault(edge_id, [])
         rec.append(query)
@@ -55,14 +71,23 @@ class AdaptiveKnowledgeUpdater:
         if len(self._pending[edge_id]) < self.cfg.update_trigger:
             return False
         self._pending[edge_id] = []
-        self.push_update(edge_id, store, now)
+        self.push_update(edge_id, store, now, link_up=link_up)
         return True
 
     def push_update(self, edge_id: str, store: VectorStore,
-                    now: float = 0.0) -> int:
-        """Ship community chunks relevant to the edge's recent queries."""
+                    now: float = 0.0, link_up: bool = True) -> int:
+        """Ship community chunks relevant to the edge's recent queries and
+        stamp the store with the new epoch. With the link down, the epoch
+        still advances (the cloud's knowledge moved on) but nothing ships:
+        the edge is marked deferred and reconciles via :meth:`sync`."""
         queries = self._recent.get(edge_id, [])
         if not queries:
+            return 0
+        self.latest_epoch += 1
+        st = self.stats.setdefault(edge_id, UpdateStats())
+        if not link_up:
+            self.deferred.add(edge_id)
+            st.deferred += 1
             return 0
         chunks = self.graph.community_chunks_for_queries(
             queries, self.cfg.top_k_communities,
@@ -71,11 +96,27 @@ class AdaptiveKnowledgeUpdater:
         fresh = [Chunk(c.text, c.keywords, c.source, c.topic, now)
                  for c in chunks if c.text not in existing]
         evicted = store.add(fresh)
-        st = self.stats.setdefault(edge_id, UpdateStats())
+        store.epoch = self.latest_epoch
+        self.deferred.discard(edge_id)
         st.updates += 1
         st.chunks_shipped += len(fresh)
         st.chunks_evicted += evicted
         return len(fresh)
+
+    def sync(self, edge_id: str, store: VectorStore,
+             now: float = 0.0) -> int:
+        """Anti-entropy reconciliation after a partition heals: replay the
+        deferred refresh for this edge, catching its store up to the
+        newest epoch. No-op for edges that aren't owed anything."""
+        if edge_id not in self.deferred:
+            return 0
+        st = self.stats.setdefault(edge_id, UpdateStats())
+        st.synced += 1
+        return self.push_update(edge_id, store, now, link_up=True)
+
+    def is_stale(self, store: VectorStore) -> bool:
+        """Is this store serving knowledge older than the newest epoch?"""
+        return store.epoch < self.latest_epoch
 
 
 __all__ = ["AdaptiveKnowledgeUpdater", "KnowledgeUpdateConfig", "UpdateStats"]

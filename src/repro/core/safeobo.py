@@ -10,6 +10,16 @@ warmup evidence (a failure mode we hit with a single shared buffer).
 Warm-up phase: uniform-random arms. Exploitation:
   safe set S_t = S_0 ∪ {x : μ1-βσ1 ≥ QoS_acc ∧ μ2+βσ2 ≤ QoS_delay}
   x_t = argmin_{x∈S_t} μ0 - β σ0           (LCB on cost)
+
+``select`` optionally takes an ARM-AVAILABILITY MASK (open circuit
+breaker, network partition): unavailable arms are excluded from both the
+warmup draw and the exploit safe set, including the S_0 seed arm — an
+unreachable arm is never "safe". Availability is an infrastructure fact,
+not a learned quantity, so it must never enter the GP posterior: callers
+simply don't ``update`` on failures (the PR-5 shed rule), and the mask
+guarantees the optimizer can't route into a known-dead arm in the first
+place. With ``available=None`` the selection path — including the RNG
+stream — is bit-identical to the unmasked behavior.
 """
 from __future__ import annotations
 
@@ -80,11 +90,30 @@ class SafeOBO:
                 out[i, a] = (float(mu[0]), float(sd[0]))
         return out
 
-    def select(self, ctx: np.ndarray) -> Tuple[int, dict]:
+    def select(self, ctx: np.ndarray,
+               available: Optional[Sequence[bool]] = None
+               ) -> Tuple[int, dict]:
+        """Pick an arm for this context. ``available[a] = False`` (open
+        breaker, partition) removes arm ``a`` from consideration entirely;
+        ``None`` keeps the legacy unmasked path bit-for-bit (same RNG
+        draws in warmup)."""
         cfg = self.cfg
+        avail = None if available is None else np.asarray(available, bool)
+        if avail is not None and avail.shape != (cfg.n_arms,):
+            raise ValueError(
+                f"availability mask must have shape ({cfg.n_arms},), "
+                f"got {avail.shape}")
+        if avail is not None and not avail.any():
+            raise ValueError("availability mask excludes every arm")
         if self.t < cfg.warmup_steps:
-            arm = int(self.rng.integers(cfg.n_arms))
-            return arm, {"phase": "warmup", "safe": list(range(cfg.n_arms))}
+            if avail is None:
+                arm = int(self.rng.integers(cfg.n_arms))
+            else:
+                opts = np.flatnonzero(avail)
+                arm = int(opts[self.rng.integers(len(opts))])
+            return arm, {"phase": "warmup",
+                         "safe": (list(range(cfg.n_arms)) if avail is None
+                                  else np.flatnonzero(avail).tolist())}
         p = self.posteriors(ctx)
         mu0, sd0 = p[0, :, 0], p[0, :, 1]
         mu1, sd1 = p[1, :, 0], p[1, :, 1]
@@ -92,6 +121,12 @@ class SafeOBO:
         safe = ((mu1 - cfg.beta_safe * sd1 >= cfg.qos_min_acc)
                 & (mu2 + cfg.beta_safe * sd2 <= cfg.qos_max_delay))
         safe[cfg.safe_seed_arm] = True            # S_0 seed
+        if avail is not None:
+            safe &= avail                 # an unreachable arm is never safe
+            if not safe.any():
+                # nothing provably safe is reachable: degrade to the best
+                # reachable arm rather than routing into a dead one
+                safe = avail.copy()
         lcb = mu0 - cfg.beta * sd0
         lcb_masked = np.where(safe, lcb, np.inf)
         arm = int(np.argmin(lcb_masked))

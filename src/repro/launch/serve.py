@@ -21,6 +21,17 @@ may preempt resident batch work when slots run out), ``--no-preemption``
 disables resident reclaim, and ``--overload-watermark`` sheds batch-class
 submissions (typed, reported per prompt) once queued + resident work
 reaches that multiple of slot capacity.
+
+Crash-tolerance knobs (the health layer, all optional):
+``--breaker-threshold N`` arms a per-engine circuit breaker — N
+consecutive losses (crash reaps, stuck-resident timeouts) quarantine the
+engine until a timed half-open probe; ``--hedge-ms M`` spawns a second
+"cloud" engine and fires a backup submission for any interactive prompt
+still waiting after M milliseconds (first completion wins, the loser is
+cancelled); ``--chaos`` hard-crashes the edge engine mid-run — all
+device state is lost, the engine restarts cold, and the scheduler
+re-enqueues the dead engine's residents (banked tokens resume via the
+prefix cache), demonstrating that no prompt is lost.
 """
 from __future__ import annotations
 
@@ -65,6 +76,21 @@ def main():
                     help="shed batch-class submissions (typed) once "
                          "(queued + resident) / slot capacity reaches "
                          "this value")
+    ap.add_argument("--breaker-threshold", type=int, default=None,
+                    help="per-engine circuit breaker: quarantine an "
+                         "engine after this many consecutive losses "
+                         "(crash reaps / stuck-resident timeouts) until "
+                         "a timed half-open probe succeeds")
+    ap.add_argument("--hedge-ms", type=float, default=None,
+                    help="fire a backup submission on a second 'cloud' "
+                         "engine for interactive prompts still waiting "
+                         "after this many ms; first completion wins and "
+                         "the loser is cancelled")
+    ap.add_argument("--chaos", action="store_true",
+                    help="hard-crash the edge engine mid-run (all device "
+                         "state lost) and restart it cold; the scheduler "
+                         "re-enqueues the lost residents — demonstrates "
+                         "zero-loss crash recovery")
     ap.add_argument("--prompts", nargs="+",
                     default=["What is the capital of France?"])
     args = ap.parse_args()
@@ -72,6 +98,10 @@ def main():
     cfg = get_config(args.arch, reduced=True)
     if cfg.vocab < 300:
         raise SystemExit("arch vocab too small for byte tokenizer")
+    if args.static and (args.chaos or args.hedge_ms is not None
+                        or args.breaker_threshold is not None):
+        raise SystemExit("--chaos/--hedge-ms/--breaker-threshold need the "
+                         "scheduler: drop --static")
     eng = ServingEngine(cfg, max_seq=args.max_seq, max_batch=args.max_batch,
                         kv_layout=args.kv_layout, page_size=args.page_size,
                         num_pages=args.num_pages,
@@ -106,12 +136,38 @@ def main():
               f"{stats.new_tokens} tokens at {stats.tokens_per_s:.1f} "
               f"tok/s; traces: {eng.trace_counts}")
     else:
-        sched = TierScheduler({"edge": eng}, preempt=args.preemption,
-                              overload_watermark=args.overload_watermark)
+        pools = {"edge": eng}
+        hedge_s = None
+        if args.hedge_ms is not None:
+            # hedging needs somewhere to hedge TO: a second engine
+            # standing in for the cloud tier (same reduced arch)
+            pools["cloud"] = ServingEngine(
+                cfg, max_seq=args.max_seq, max_batch=args.max_batch,
+                seed=1, kv_layout=args.kv_layout,
+                page_size=args.page_size, num_pages=args.num_pages,
+                prefix_cache=args.prefix_cache)
+            hedge_s = args.hedge_ms / 1e3
+        sched = TierScheduler(pools, preempt=args.preemption,
+                              overload_watermark=args.overload_watermark,
+                              breaker_threshold=args.breaker_threshold,
+                              hedge_s=hedge_s, hedge_from="edge",
+                              hedge_to="cloud")
         t0 = time.perf_counter()
         for r in reqs:
             sched.submit(r, "edge")
-        comps = {id(c.request): c for c in sched.drain()}
+        comps = {}
+        if args.chaos:
+            # let work land, then kill the engine under it: every
+            # device-side byte is gone; the reap + requeue path must
+            # re-serve the lost residents after the cold restart
+            for _ in range(3):
+                comps.update({id(c.request): c for c in sched.pump()})
+            lost = eng.crash()
+            eng.restart()
+            print(f"[chaos] edge engine crashed with {len(lost)} "
+                  f"resident(s); restarted cold (generation "
+                  f"{eng.engine_generation})")
+        comps.update({id(c.request): c for c in sched.drain()})
         wall = time.perf_counter() - t0
         sheds = {id(s.request): s for s in sched.pop_sheds()}
         for p, r in zip(args.prompts, reqs):
@@ -119,6 +175,8 @@ def main():
                 c = comps[id(r)]
                 tag = (f"  [preempted x{c.preemptions}, resumed]"
                        if c.preemptions else "")
+                if c.hedged:
+                    tag += f"  [hedged -> {c.tier}]"
                 print(f"> {p!r}\n  -> {c.text!r}{tag}")
             else:
                 s = sheds[id(r)]
@@ -130,6 +188,15 @@ def main():
               f"tokens at {tokens / max(wall, 1e-9):.1f} tok/s; "
               f"preempted {sc['preempted']}, resumed {sc['resumed']}, "
               f"shed {sched.shed_total}; traces: {eng.trace_counts}")
+        if args.chaos or args.breaker_threshold is not None or hedge_s:
+            from repro.serving.health import breaker_states
+            br = (breaker_states(sched.breakers, sched.clock())
+                  if sched.breakers else {})
+            print(f"[health] crashes {eng.crashes}, lost-to-crash "
+                  f"{sc['engine_lost'] + sc['requeued_lost']}, requeued "
+                  f"{sc['requeued_lost']}, hedged {sc['hedged']}, "
+                  f"cancelled {sc['cancelled']}"
+                  + (f"; breakers {br}" if br else ""))
     if eng.kv_layout == "paged" and eng.prefix_cache_enabled:
         print(f"[prefix-cache] {eng.prefix_hits} hits / "
               f"{eng.prefix_misses} misses, "

@@ -41,6 +41,12 @@ class VectorStore:
         self.capacity = capacity
         self.use_pallas = use_pallas
         self.chunks: List[Chunk] = []
+        # knowledge epoch this store was last synced to (stamped by the
+        # cloud updater on every successful push; monotone). A store whose
+        # epoch trails the updater's latest is serving STALE knowledge —
+        # answers from it carry a stale_epoch flag until anti-entropy
+        # reconciliation catches it up.
+        self.epoch = 0
         self._emb = np.zeros((0, DIM), np.float32)
         self._kw_set: set = set()
         self._kw_dirty = True

@@ -2,6 +2,7 @@ from repro.serving.engine import (
     EngineCompletion, EngineError, GenStats, PreemptedRequest, Request,
     ServingEngine, make_cloud_engine, make_edge_engine,
 )
+from repro.serving.health import CircuitBreaker, breaker_states
 from repro.serving.paging import (
     PageAllocator, PagingError, PrefixCache, pages_needed,
 )
@@ -13,4 +14,5 @@ __all__ = ["ServingEngine", "Request", "GenStats", "EngineCompletion",
            "EngineError", "PreemptedRequest",
            "make_edge_engine", "make_cloud_engine",
            "TierScheduler", "Completion", "SchedulerError", "Shed",
+           "CircuitBreaker", "breaker_states",
            "PageAllocator", "PrefixCache", "PagingError", "pages_needed"]

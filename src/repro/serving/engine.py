@@ -91,6 +91,32 @@ greedy resume re-derives it from identical logits). The scheduler layers
 shed/timeout/failover on top (:mod:`repro.serving.scheduler`,
 :mod:`repro.cluster.simulator`).
 
+**Crash and recovery (the hard-failure state machine, engine side).**
+Unlike a stall (engine frozen, state intact) or a preemption (one resident
+reclaimed, shared pages survive), :meth:`crash` models a process/device
+loss: EVERY slot, the whole page arena, the allocator and the prefix index
+are gone at once. ``crash()`` marks the engine ``dead`` (admit/step/preempt
+raise :class:`EngineError`; ``can_admit`` answers False) and returns the
+request ids of the residents that died with it — the scheduler reaps those
+as typed ``engine_lost`` outcomes and re-serves them from their original
+prompts (tokens still in engine memory are lost; tokens a scheduler banked
+from an earlier preemption survive, because they live in the control
+plane). :meth:`restart` rebuilds a COLD engine — zeroed arena, fresh
+allocator and prefix index, empty slots — and bumps
+:attr:`engine_generation` so stale references (a scheduler's resident keys,
+memoized admission plans) are detectably invalid. The jitted functions are
+kept: shapes and dtypes are unchanged, so a restarted engine re-serves
+without re-tracing, and greedy output is token-identical to a never-crashed
+engine.
+
+**Clocks.** Engine-level request timestamps (admission time, completion
+``time_in_engine_s``) read the injectable ``clock`` (any zero-arg callable
+returning seconds; default ``time.perf_counter``) — a simulator injecting a
+:class:`~repro.core.clock.VirtualClock` gets logical residency times that
+compose with its queue waits instead of mixing wall and event time. The
+``prefill_s``/``decode_s`` accumulators deliberately stay on the wall
+clock: they measure real jit compute for ``engine_time="wall"``.
+
 All jitted functions run at fixed shapes — decode, sampling, page-copy and
 (contiguous) insert compile exactly once per engine config; prefill
 compiles once per power-of-two pad bucket (heavy-tailed prompt mixes
@@ -104,7 +130,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (
+    Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple,
+)
 
 import jax
 import jax.numpy as jnp
@@ -229,10 +257,13 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, max_seq: int = 512,
                  max_batch: int = 8, seed: int = 0, params=None,
                  kv_layout: str = "auto", page_size: int = 16,
-                 num_pages: Optional[int] = None, prefix_cache: bool = True):
+                 num_pages: Optional[int] = None, prefix_cache: bool = True,
+                 clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.max_seq = max_seq
         self.max_batch = max_batch
+        self._clock: Callable[[], float] = (time.perf_counter
+                                            if clock is None else clock)
         self.tok = ByteTokenizer()
         if cfg.vocab < self.tok.vocab_size:
             raise EngineError(
@@ -311,6 +342,9 @@ class ServingEngine:
         self.prefix_misses = 0
         self.prefix_tokens_shared = 0
         self.preemptions = 0      # residents reclaimed via preempt()
+        self.dead = False         # crashed and not yet restarted
+        self.engine_generation = 0  # bumped on every restart()
+        self.crashes = 0          # crash() calls over the engine's lifetime
 
         # ---- fixed-shape jitted functions with trace instrumentation ------
         # the counters increment only when JAX (re)traces a function, so a
@@ -523,8 +557,9 @@ class ServingEngine:
         """A free slot AND (paged) enough allocatable pages for the
         request's unshared demand. Because pages are reserved through a
         request's whole budget, an engine draining its residents always
-        becomes admissible again."""
-        if self.free_slots == 0:
+        becomes admissible again. A crashed engine admits nothing until
+        :meth:`restart`."""
+        if self.dead or self.free_slots == 0:
             return False
         plan = self._plan(request)
         if not plan.feasible:
@@ -540,6 +575,8 @@ class ServingEngine:
         into freshly allocated pages. Returns the engine-local request id
         used in :class:`EngineCompletion`. Callers gate on
         :meth:`can_admit`."""
+        if self.dead:
+            raise EngineError("admit: engine crashed; restart() first")
         slot = next((i for i, s in enumerate(self._slots) if s is None), None)
         if slot is None:
             raise RuntimeError("no free slot; check can_admit before admit")
@@ -615,7 +652,7 @@ class ServingEngine:
         rid = self._next_req_id
         self._next_req_id += 1
         self._slots[slot] = _Slot(rid, request, budget, L, pending,
-                                  admitted_at=time.perf_counter(),
+                                  admitted_at=self._clock(),
                                   page_ids=page_ids, enc=enc)
         self._tokens[slot] = pending
         self._positions[slot] = L
@@ -627,8 +664,10 @@ class ServingEngine:
         """One pump of the pool: harvest pending tokens (retiring finished
         sequences, freeing their slot and page references), then run ONE
         fixed-shape decode for whatever remains active."""
+        if self.dead:
+            raise EngineError("step: engine crashed; restart() first")
         done: List[EngineCompletion] = []
-        now = time.perf_counter()
+        now = self._clock()
         for i, s in enumerate(self._slots):
             if s is None:
                 continue
@@ -693,6 +732,10 @@ class ServingEngine:
         decode re-derives the pending token from identical logits — so a
         preempted-then-resumed greedy request is token-identical to an
         uninterrupted run. Raises :class:`EngineError` for unknown ids."""
+        if self.dead:
+            raise EngineError(
+                "preempt: engine crashed — nothing survives a crash; the "
+                "scheduler reaps lost residents instead of preempting them")
         slot = next((i for i, s in enumerate(self._slots)
                      if s is not None and s.req_id == req_id), None)
         if slot is None:
@@ -721,6 +764,61 @@ class ServingEngine:
         return n
 
     # ------------------------------------------------------------------
+    # Hard failure: crash / restart
+    # ------------------------------------------------------------------
+    def crash(self) -> List[int]:
+        """Hard failure: the engine process/device is gone. Every resident
+        request dies with it (their generated-so-far tokens included —
+        unlike :meth:`preempt`, nothing is snapshotted), the page arena,
+        allocator and prefix index are lost, and the engine refuses all
+        work (``dead``) until :meth:`restart`. Returns the engine-local
+        request ids of the residents that were lost, so a scheduler can
+        reap its bookkeeping for them."""
+        if self.dead:
+            raise EngineError("crash: engine is already dead")
+        lost = [s.req_id for s in self._slots if s is not None]
+        self.dead = True
+        self.crashes += 1
+        # host-side slot state is wiped immediately; the device arena and
+        # page bookkeeping are rebuilt cold by restart()
+        self._slots = [None] * self.max_batch
+        self._tokens[:] = self.tok.pad_id
+        self._positions[:] = 0
+        self._temps[:] = 0.0
+        self._plan_cache = None
+        return lost
+
+    def restart(self) -> None:
+        """Rebuild a COLD engine after :meth:`crash`: zeroed KV arena,
+        fresh allocator and prefix index, empty slot pool, and a bumped
+        :attr:`engine_generation` (so any stale external reference —
+        scheduler resident keys, memoized plans — is detectably invalid).
+        The jitted functions are kept: shapes and dtypes are unchanged,
+        so a restarted engine serves without re-tracing. Request ids keep
+        counting up across restarts — a pre-crash id can never collide
+        with a post-restart admission."""
+        if not self.dead:
+            raise EngineError("restart: engine has not crashed")
+        if self.kv_layout == "paged":
+            arena_defs = self.model.paged_cache_defs(self.num_pages + 1,
+                                                     self.page_size)
+            self._cache = _tmap(lambda d: jnp.zeros(d.shape, d.dtype),
+                                arena_defs)
+            self._allocator = PageAllocator(self.num_pages)
+            if self._prefix is not None:
+                self._prefix = PrefixCache(self.page_size)
+                self._allocator.evict_cb = self._prefix.forget
+            self._page_tables = np.full(
+                (self.max_batch, self.pages_per_slot), TRASH_PAGE, np.int32)
+        else:
+            pool_defs = self.model.cache_defs(self.max_batch)
+            self._cache = _tmap(lambda d: jnp.zeros(d.shape, d.dtype),
+                                pool_defs)
+        self._plan_cache = None
+        self.engine_generation += 1
+        self.dead = False
+
+    # ------------------------------------------------------------------
     # Batch conveniences on top of the pool
     # ------------------------------------------------------------------
     def generate(self, requests: Sequence[Request]
@@ -745,6 +843,8 @@ class ServingEngine:
 
     def _pump_all(self, requests: Sequence[Request], *, continuous: bool
                   ) -> Tuple[List[str], GenStats]:
+        if self.dead:
+            raise EngineError("engine crashed; restart() first")
         if self.has_active:
             raise EngineError("engine already has resident requests")
         bad = next((r for r in requests if not self.fits(r)), None)
@@ -789,6 +889,8 @@ class ServingEngine:
         buckets are compiled too because prefix-cache hits shrink the
         prefilled suffix below the prompt length. Lets benchmarks separate
         compile from serve time."""
+        if self.dead:
+            raise EngineError("cannot warm up a crashed engine")
         if self.has_active:
             raise EngineError("cannot warm up a busy engine")
         cap = max((self._pad_bucket(max(n, 1)) for n in prompt_lens),

@@ -1,0 +1,121 @@
+"""Serving/cluster health primitives: the circuit breaker.
+
+Hard failures repeat: a flaky edge node that crashed once will very likely
+crash again inside the same incident window, and routing fresh work onto it
+just feeds the failure (every lost residency is a request that restarts
+from its original prompt). A :class:`CircuitBreaker` is the standard fix —
+per protected resource (a pool engine, a whole tier) it tracks consecutive
+failures and trips open, shedding the resource from routing until a timed
+half-open probe proves it healthy again.
+
+State machine (driven entirely by an injected clock — virtual time in
+simulations, ``time.perf_counter`` live)::
+
+    closed ──[threshold consecutive failures]──> open
+    open   ──[reset_timeout_s elapsed]─────────> half_open
+    half_open ──[probe admitted, succeeds]─────> closed
+    half_open ──[any failure]──────────────────> open (timer restarts)
+
+``allow()`` answers "may new work be routed here right now": always in
+``closed``, never in ``open``, and exactly ONE in-flight probe at a time in
+``half_open`` (callers mark the probe with :meth:`begin_probe` when they
+actually commit work — ``allow`` alone never consumes the probe slot, so a
+caller that asks but then admits elsewhere doesn't burn it).
+
+The breaker never touches the resource it guards; it is pure host-side
+bookkeeping consulted at routing time, exactly like the
+:class:`~repro.serving.paging.PageAllocator` is consulted at admission
+time. Failure *sources* are the caller's choice: the scheduler records a
+failure per resident lost to an engine crash and per stuck-resident
+timeout; the cluster records tier-level sheds, drops and crash events.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half_open"
+
+
+class CircuitBreaker:
+    """Consecutive-failure breaker with timed half-open probes."""
+
+    def __init__(self, threshold: int = 3, reset_timeout_s: float = 5.0):
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        if reset_timeout_s <= 0:
+            raise ValueError(
+                f"reset_timeout_s must be > 0, got {reset_timeout_s}")
+        self.threshold = threshold
+        self.reset_timeout_s = reset_timeout_s
+        self._state = CLOSED
+        self._failures = 0            # consecutive failures since success
+        self._opened_at = 0.0
+        self._probing = False         # half-open probe committed, in flight
+        self.trips = 0                # closed/half_open -> open transitions
+        self.probes = 0               # half-open probes committed
+
+    # ------------------------------------------------------------------
+    def state(self, now: float) -> str:
+        """Current state at time ``now`` (promotes open -> half_open once
+        the reset timeout has elapsed)."""
+        if (self._state == OPEN
+                and now - self._opened_at >= self.reset_timeout_s):
+            self._state = HALF_OPEN
+            self._probing = False
+        return self._state
+
+    @property
+    def consecutive_failures(self) -> int:
+        return self._failures
+
+    def allow(self, now: float) -> bool:
+        """May new work be routed to the guarded resource right now?"""
+        s = self.state(now)
+        if s == CLOSED:
+            return True
+        if s == HALF_OPEN:
+            return not self._probing
+        return False
+
+    def begin_probe(self, now: float) -> None:
+        """Caller committed work during half-open: occupy the single probe
+        slot until the work succeeds (-> closed) or fails (-> open).
+        No-op outside half-open."""
+        if self.state(now) == HALF_OPEN and not self._probing:
+            self._probing = True
+            self.probes += 1
+
+    def record_success(self, now: float) -> None:
+        """Work on the guarded resource finished cleanly."""
+        self._state = CLOSED
+        self._failures = 0
+        self._probing = False
+
+    def record_failure(self, now: float) -> None:
+        """Work on the guarded resource failed (crash, timeout, shed)."""
+        self._failures += 1
+        s = self.state(now)
+        if s == HALF_OPEN or (s == CLOSED
+                              and self._failures >= self.threshold):
+            self._state = OPEN
+            self._opened_at = now
+            self._probing = False
+            self.trips += 1
+        elif s == OPEN:
+            # repeated failures while open (e.g. residents reaped after the
+            # trip) hold the window open from the latest failure
+            self._opened_at = now
+
+    def __repr__(self) -> str:
+        return (f"CircuitBreaker(state={self._state!r}, "
+                f"failures={self._failures}, trips={self.trips})")
+
+
+def breaker_states(breakers: Dict, now: float) -> Dict[str, str]:
+    """Snapshot ``{name: state}`` for a dict of breakers (diagnostics)."""
+    return {str(k): b.state(now) for k, b in breakers.items()}
+
+
+__all__ = ["CircuitBreaker", "breaker_states", "CLOSED", "OPEN", "HALF_OPEN"]

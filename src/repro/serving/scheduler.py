@@ -17,8 +17,8 @@ a class the earliest deadline wins. If the head doesn't fit on ANY pool
 member, later requests wait behind it rather than jumping the queue, so a
 big request can't be starved by a stream of small ones.
 
-**The overload state machine** (every transition is a typed outcome,
-never a silent drop)::
+**The overload + hard-failure state machine** (every transition is a typed
+outcome, never a silent drop)::
 
     submit ──fits no pool member──────────────────────> SchedulerError
     submit ──batch + saturation >= overload_watermark──> Shed("overload")
@@ -27,6 +27,9 @@ never a silent drop)::
                  (engine snapshot -> re-enqueued -> resumes via prefix
                   cache, greedy token-identical)
     resident ──no engine progress for request_timeout_s─> Shed("timeout")
+    resident ──engine crashed / restarted under it──────> REAPED: re-enqueued
+                 from its original prompt (requeue_lost=True, default) or
+                 emitted as Shed("engine_lost") for the caller's failover
     resident ──finished────────────────────────────────> Completion
 
 - *Preemption* (``preempt=True``, the default): when the head cannot be
@@ -50,13 +53,43 @@ never a silent drop)::
   submissions are shed immediately when the tier's saturation (queued +
   resident over total slot capacity) is at/above the watermark;
   interactive submissions always enqueue.
+- *Engine-loss reaping*: every resident records the ``engine_generation``
+  it was admitted under. At the top of each pump, residents whose engine
+  is dead — or restarted since admission (generation mismatch) — are
+  reaped: their in-engine tokens died with the device state, but tokens
+  banked by an EARLIER preemption (already in ``item.emitted``) survive
+  in the control plane. With ``requeue_lost=True`` the reaped item
+  re-enters the queue through the same resume path preemption uses (the
+  restarted engine's prefix cache is cold, so the whole prompt reruns —
+  still token-identical under greedy decode); with ``requeue_lost=False``
+  it is emitted as ``Shed("engine_lost")`` so a cluster layer can apply
+  its own failover policy (backoff, tier escalation).
+- *Circuit breakers* (``breaker_threshold``): each pool member gets a
+  :class:`~repro.serving.health.CircuitBreaker`. Reaped residents and
+  stuck-resident timeouts count as failures against the engine they were
+  on; completions count as successes. An engine whose breaker won't
+  ``allow()`` is skipped at admission exactly like a stalled one — so a
+  flaky node stops receiving fresh work until a half-open probe (one
+  request, marked via ``begin_probe``) proves it healthy.
+- *Hedging* (``hedge_s``): an interactive request still unfinished
+  ``hedge_s`` after submission to ``hedge_from`` fires ONE backup
+  submission of the same prompt on ``hedge_to``; first completion wins
+  and the loser is cancelled (removed from its queue, or preempted off
+  its engine with the snapshot discarded). The pair shares one logical
+  request: the winner's :class:`Completion` always carries the PRIMARY
+  ``Request`` object so callers can join on identity, and the losing leg
+  retires as ``cancelled`` — never a Shed, never a second completion.
+  ``hedge_gate`` (a ``now -> bool`` callable) can veto hedge firing, e.g.
+  while the edge<->cloud link is partitioned.
 
-Every terminal outcome is counted (``counters``) and conservation —
-``submitted == completed + shed + timed_out + overload_shed + queued +
-resident`` — is checkable at any time via :meth:`conservation_ok`, so work
-can never vanish. ``drain()`` detects wedges (no admission, step, shed, or
-preemption progress while work remains) and raises :class:`SchedulerError`
-instead of spinning forever.
+Every terminal outcome is counted (``counters``) and hedge-aware
+conservation — ``submitted + hedged == completed + shed_total + cancelled
++ queued + resident`` — is checkable at any time via
+:meth:`conservation_ok`, so work can never vanish. ``drain()`` detects
+wedges (no admission, step, shed, or preemption progress while work
+remains) and raises :class:`SchedulerError` carrying a full
+:meth:`debug_state` dump — queue depths, per-engine residents, breaker
+states — instead of spinning forever.
 
 All timings run on an injectable ``clock`` (any zero-arg callable returning
 seconds; default ``time.perf_counter``). ``submit(now=...)`` and
@@ -75,6 +108,7 @@ from typing import (
 )
 
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.health import CircuitBreaker
 
 # lower rank = higher priority; unknown classes schedule as batch
 SLO_RANK: Dict[str, int] = {"interactive": 0, "batch": 1}
@@ -108,6 +142,13 @@ class _Item:
     emitted: List[int] = field(compare=False, default_factory=list)
     preemptions: int = field(compare=False, default=0)
     last_progress_at: float = field(compare=False, default=0.0)
+    # ---- crash-reaping / hedging state --------------------------------
+    admit_gen: int = field(compare=False, default=0)   # engine_generation
+    #                                                    at admission time
+    submitted_at: float = field(compare=False, default=0.0)
+    partner: Optional["_Item"] = field(compare=False, default=None)
+    is_hedge: bool = field(compare=False, default=False)
+    done: bool = field(compare=False, default=False)
 
 
 @dataclass
@@ -123,6 +164,7 @@ class Completion:
     engine_wall_s: float = 0.0   # engine-measured wall time (last residency)
     slo: str = "batch"
     preemptions: int = 0         # times this request was preempted
+    hedged: bool = False         # served by the backup (hedge) submission
 
 
 @dataclass
@@ -133,7 +175,7 @@ class Shed:
     every Shed is counted and queued on :meth:`TierScheduler.pop_sheds`."""
     request: Request
     tier: str
-    reason: str                  # "deadline" | "timeout" | "overload"
+    reason: str         # "deadline" | "timeout" | "overload" | "engine_lost"
     t: float                     # scheduler-clock time of the shed
     slo: str = "batch"
     queue_wait_s: float = 0.0
@@ -142,7 +184,7 @@ class Shed:
 
 
 _SHED_COUNTER = {"deadline": "shed", "timeout": "timed_out",
-                 "overload": "overload_shed"}
+                 "overload": "overload_shed", "engine_lost": "engine_lost"}
 
 
 class TierScheduler:
@@ -162,7 +204,14 @@ class TierScheduler:
                  preempt: bool = True,
                  shed_overdue: bool = False,
                  request_timeout_s: Optional[float] = None,
-                 overload_watermark: Optional[float] = None):
+                 overload_watermark: Optional[float] = None,
+                 requeue_lost: bool = True,
+                 breaker_threshold: Optional[int] = None,
+                 breaker_reset_s: float = 5.0,
+                 hedge_s: Optional[float] = None,
+                 hedge_from: str = "edge",
+                 hedge_to: str = "cloud",
+                 hedge_gate: Optional[Callable[[float], bool]] = None):
         self.pools: Dict[str, List[ServingEngine]] = {}
         for tier, pool in engines.items():
             members = list(pool) if isinstance(pool, (list, tuple)) else [pool]
@@ -176,12 +225,25 @@ class TierScheduler:
         self.shed_overdue = shed_overdue
         self.request_timeout_s = request_timeout_s
         self.overload_watermark = overload_watermark
+        self.requeue_lost = requeue_lost
+        self.hedge_s = hedge_s
+        self.hedge_from = hedge_from
+        self.hedge_to = hedge_to
+        self.hedge_gate = hedge_gate
         self._queues: Dict[str, List[_Item]] = {t: [] for t in self.pools}
         self._inflight: Dict[Tuple[str, int, int], _Item] = {}
         self._seq = itertools.count()
+        self.breakers: Dict[Tuple[str, int], CircuitBreaker] = {}
+        if breaker_threshold is not None:
+            for tier, pool in self.pools.items():
+                for i in range(len(pool)):
+                    self.breakers[(tier, i)] = CircuitBreaker(
+                        breaker_threshold, breaker_reset_s)
         self.counters: Dict[str, int] = {
             "submitted": 0, "completed": 0, "shed": 0, "timed_out": 0,
-            "overload_shed": 0, "preempted": 0, "resumed": 0}
+            "overload_shed": 0, "preempted": 0, "resumed": 0,
+            "engine_lost": 0, "requeued_lost": 0, "hedged": 0,
+            "cancelled": 0}
         self.sheds: List[Shed] = []
 
     # ------------------------------------------------------------------
@@ -213,14 +275,17 @@ class TierScheduler:
     @property
     def shed_total(self) -> int:
         return (self.counters["shed"] + self.counters["timed_out"]
-                + self.counters["overload_shed"])
+                + self.counters["overload_shed"]
+                + self.counters["engine_lost"])
 
     def conservation_ok(self) -> bool:
-        """Every submitted request is accounted for: completed, shed (any
-        reason), still queued, or resident. The invariant future PRs must
+        """Every submission — original or hedge leg — is accounted for:
+        completed, shed (any reason), cancelled (the losing leg of a hedge
+        pair), still queued, or resident. The invariant future PRs must
         not break — work never silently vanishes."""
-        return self.counters["submitted"] == (
+        return self.counters["submitted"] + self.counters["hedged"] == (
             self.counters["completed"] + self.shed_total
+            + self.counters["cancelled"]
             + self.pending() + self.in_flight())
 
     def pop_sheds(self) -> List[Shed]:
@@ -252,7 +317,8 @@ class TierScheduler:
         now = self.clock() if now is None else now
         self.counters["submitted"] += 1
         item = _Item(_rank(request), deadline_s, next(self._seq), request,
-                     tier, enqueued_at=now, last_progress_at=now)
+                     tier, enqueued_at=now, last_progress_at=now,
+                     submitted_at=now)
         if (self.overload_watermark is not None
                 and item.rank >= SLO_RANK["batch"]
                 and self.saturation(tier) >= self.overload_watermark):
@@ -284,9 +350,14 @@ class TierScheduler:
         pool members the fault layer has frozen: they are skipped for
         admission and stepping this round, their residents accrue no
         progress, and — with ``request_timeout_s`` — eventually time out
-        and free their slots."""
+        and free their slots. Dead engines (crashed, not yet restarted) are
+        likewise skipped, after their lost residents are reaped."""
         t_round = self.clock() if now is None else now
         out: List[Completion] = []
+        for tier, pool in self.pools.items():
+            self._reap_lost(tier, pool, t_round)
+        if self.hedge_s is not None:
+            self._fire_hedges(t_round)
         for tier, pool in self.pools.items():
             q = self._queues[tier]
 
@@ -302,7 +373,9 @@ class TierScheduler:
                 run_req = self._run_request(head)
                 eng_i = next(
                     (i for i, e in enumerate(pool)
-                     if not is_stalled(i) and e.can_admit(run_req)), None)
+                     if not is_stalled(i)
+                     and self._breaker_allows(tier, i, t_round)
+                     and e.can_admit(run_req)), None)
                 if eng_i is None:
                     if self.preempt and self._preempt_for(tier, pool, head,
                                                           t_round):
@@ -313,19 +386,34 @@ class TierScheduler:
                 item.admitted_at = t_round
                 item.last_progress_at = t_round
                 rid = pool[eng_i].admit(run_req)
+                item.admit_gen = pool[eng_i].engine_generation
+                b = self.breakers.get((tier, eng_i))
+                if b is not None:
+                    b.begin_probe(t_round)   # no-op unless half-open
                 if item.emitted or item.preemptions:
                     self.counters["resumed"] += 1
                 self._inflight[(tier, eng_i, rid)] = item
             for eng_i, eng in enumerate(pool):
-                if is_stalled(eng_i) or not eng.has_active:
+                if is_stalled(eng_i) or eng.dead or not eng.has_active:
                     continue
                 for ec in eng.step():
                     item = self._inflight.pop((tier, eng_i, ec.req_id))
+                    item.done = True
+                    b = self.breakers.get((tier, eng_i))
+                    if b is not None:
+                        b.record_success(t_round)
                     t_done = self.clock() if now is None else now
+                    partner = item.partner
+                    if partner is not None and not partner.done:
+                        self._cancel_item(partner, t_done)
+                    # the winner's Completion always carries the PRIMARY
+                    # request so callers can join on object identity
+                    primary = (partner if item.is_hedge
+                               and partner is not None else item)
                     ids = item.emitted + ec.token_ids
                     self.counters["completed"] += 1
                     out.append(Completion(
-                        request=item.request,
+                        request=primary.request,
                         text=eng.tok.decode(ids), tier=tier,
                         queue_wait_s=item.queue_wait_s,
                         time_in_engine_s=item.resident_s
@@ -335,8 +423,9 @@ class TierScheduler:
                         new_tokens=len(ids),
                         engine_index=eng_i,
                         engine_wall_s=ec.time_in_engine_s,
-                        slo=item.request.slo,
-                        preemptions=item.preemptions))
+                        slo=primary.request.slo,
+                        preemptions=item.preemptions,
+                        hedged=item.is_hedge))
                 # residents on an engine that just stepped made progress
                 for key, it in self._inflight.items():
                     if key[0] == tier and key[1] == eng_i:
@@ -351,7 +440,9 @@ class TierScheduler:
         """Pump until no work remains. Raises :class:`SchedulerError` if a
         round makes NO progress (no admission, decode step, completion,
         shed, or preemption) while work is still outstanding — a wedged
-        scheduler fails loudly instead of spinning forever."""
+        scheduler fails loudly instead of spinning forever, and the error
+        carries a :meth:`debug_state` dump so the wedge is diagnosable
+        from the message alone."""
         out: List[Completion] = []
         while self.pending() or self.in_flight():
             before = self._progress_fingerprint()
@@ -362,8 +453,32 @@ class TierScheduler:
                     f"scheduler wedged: {self.pending()} queued, "
                     f"{self.in_flight()} resident, and a full pump made no "
                     "progress (no admission, step, completion, shed, or "
-                    "preemption)")
+                    f"preemption)\n{self.debug_state()}")
         return out
+
+    def debug_state(self, now: Optional[float] = None) -> str:
+        """Multi-line diagnostic snapshot for wedge reports: per-tier
+        queue depths and head deadline, per-engine residents / free
+        capacity / liveness / generation / breaker state, and the full
+        counter map. Pure introspection — never mutates anything."""
+        now = self.clock() if now is None else now
+        lines = []
+        for tier, pool in self.pools.items():
+            q = self._queues[tier]
+            head = f"{q[0].deadline:.3f}" if q else "-"
+            lines.append(f"tier {tier!r}: queued={len(q)} "
+                         f"head_deadline={head}")
+            for i, e in enumerate(pool):
+                res = sum(1 for k in self._inflight
+                          if k[0] == tier and k[1] == i)
+                b = self.breakers.get((tier, i))
+                bs = b.state(now) if b is not None else "none"
+                lines.append(
+                    f"  engine[{i}]: residents={res} "
+                    f"free_slots={e.free_slots} dead={e.dead} "
+                    f"generation={e.engine_generation} breaker={bs}")
+        lines.append(f"counters={self.counters}")
+        return "\n".join(lines)
 
     # ------------------------------------------------------------------
     # Internals
@@ -385,13 +500,21 @@ class TierScheduler:
 
     def _record_shed(self, item: _Item, reason: str, now: float,
                      queued: bool = True) -> None:
+        item.done = True
+        if item.partner is not None and not item.partner.done:
+            # the other leg of the hedge pair is still live and carries
+            # the request — this leg just retires as a cancelled duplicate
+            self.counters["cancelled"] += 1
+            return
+        primary = (item.partner if item.is_hedge
+                   and item.partner is not None else item)
         self.counters[_SHED_COUNTER[reason]] += 1
         wait = item.queue_wait_s
         if queued:
             wait += max(now - item.enqueued_at, 0.0)
         self.sheds.append(Shed(
-            request=item.request, tier=item.tier, reason=reason, t=now,
-            slo=item.request.slo, queue_wait_s=wait,
+            request=primary.request, tier=item.tier, reason=reason, t=now,
+            slo=primary.request.slo, queue_wait_s=wait,
             emitted_tokens=len(item.emitted),
             preemptions=item.preemptions))
 
@@ -425,6 +548,7 @@ class TierScheduler:
             del self._inflight[key]
             it.resident_s += max(now - it.admitted_at, 0.0)
             it.emitted.extend(snap.emitted_ids)
+            self._breaker_fail(tier, eng_i, now)
             self._record_shed(it, "timeout", now, queued=False)
 
     def _preempt_for(self, tier: str, pool: List[ServingEngine],
@@ -461,15 +585,121 @@ class TierScheduler:
         it.resident_s += max(now - it.admitted_at, 0.0)
         it.enqueued_at = now
         it.last_progress_at = now
-        it.run_request = Request(
+        it.run_request = self._resume_request(it)
+        heapq.heappush(self._queues[tier], it)
+        self.counters["preempted"] += 1
+        return True
+
+    def _resume_request(self, it: _Item) -> Request:
+        """The request for a fresh admission after the current residency
+        ended early (preemption or engine loss): the original prompt plus
+        whatever tokens the CONTROL PLANE has banked in ``it.emitted``.
+        After a crash that is only tokens saved by an earlier preemption —
+        in-engine progress died with the device state."""
+        if it.enc is None or not it.emitted:
+            return it.request
+        return Request(
             prompt=it.request.prompt,
             prompt_ids=it.enc + it.emitted,
             max_new_tokens=it.request.max_new_tokens - len(it.emitted),
             temperature=it.request.temperature,
             slo=it.request.slo)
-        heapq.heappush(self._queues[tier], it)
-        self.counters["preempted"] += 1
-        return True
+
+    # ------------------------------------------------------------------
+    # Crash reaping / breakers / hedging
+    # ------------------------------------------------------------------
+    def _breaker_allows(self, tier: str, eng_i: int, now: float) -> bool:
+        b = self.breakers.get((tier, eng_i))
+        return b is None or b.allow(now)
+
+    def _breaker_fail(self, tier: str, eng_i: int, now: float) -> None:
+        b = self.breakers.get((tier, eng_i))
+        if b is not None:
+            b.record_failure(now)
+
+    def _reap_lost(self, tier: str, pool: List[ServingEngine],
+                   now: float) -> None:
+        """Reclaim residents whose engine crashed — or crashed AND
+        restarted — since they were admitted (``engine_generation``
+        mismatch catches a full crash/restart cycle between pumps).
+        Device-side progress is gone; each lost resident either re-enters
+        the queue from its original prompt (+ any tokens banked by an
+        earlier preemption) or becomes a typed ``Shed("engine_lost")``
+        for the caller's failover. Every loss counts against the engine's
+        breaker."""
+        for key in [k for k in self._inflight if k[0] == tier]:
+            _, eng_i, rid = key
+            it = self._inflight[key]
+            e = pool[eng_i]
+            if not e.dead and e.engine_generation == it.admit_gen:
+                continue
+            del self._inflight[key]
+            it.resident_s += max(now - it.admitted_at, 0.0)
+            self._breaker_fail(tier, eng_i, now)
+            if it.partner is not None and not it.partner.done:
+                it.done = True
+                self.counters["cancelled"] += 1
+            elif self.requeue_lost:
+                it.run_request = self._resume_request(it)
+                it.enqueued_at = now
+                it.last_progress_at = now
+                heapq.heappush(self._queues[tier], it)
+                self.counters["requeued_lost"] += 1
+            else:
+                self._record_shed(it, "engine_lost", now, queued=False)
+
+    def _fire_hedges(self, now: float) -> None:
+        """Interactive requests still unfinished ``hedge_s`` after
+        submission to ``hedge_from`` get ONE backup submission of the
+        same original prompt on ``hedge_to``. First completion wins; the
+        loser is cancelled by the completion/shedding paths via the
+        ``partner`` link."""
+        if (self.hedge_to not in self.pools
+                or self.hedge_from not in self.pools
+                or self.hedge_to == self.hedge_from):
+            return
+        if self.hedge_gate is not None and not self.hedge_gate(now):
+            return
+        cands = list(self._queues[self.hedge_from]) + [
+            it for (t, _, _), it in self._inflight.items()
+            if t == self.hedge_from]
+        for it in cands:
+            if (it.is_hedge or it.partner is not None or it.done
+                    or it.rank != SLO_RANK["interactive"]
+                    or now - it.submitted_at < self.hedge_s):
+                continue
+            r = it.request
+            hedge_req = Request(
+                prompt=r.prompt, prompt_ids=r.prompt_ids,
+                max_new_tokens=r.max_new_tokens,
+                temperature=r.temperature, slo=r.slo)
+            h = _Item(it.rank, it.deadline, next(self._seq), hedge_req,
+                      self.hedge_to, enqueued_at=now, last_progress_at=now,
+                      submitted_at=now, is_hedge=True, partner=it)
+            it.partner = h
+            heapq.heappush(self._queues[self.hedge_to], h)
+            self.counters["hedged"] += 1
+
+    def _cancel_item(self, it: _Item, now: float) -> None:
+        """Retire the losing leg of a hedge pair: remove it from its
+        queue, or preempt it off its engine with the snapshot discarded.
+        Counted ``cancelled`` — never a Shed, never a completion — so
+        hedge-aware conservation stays exact."""
+        it.done = True
+        q = self._queues.get(it.tier)
+        if q is not None and it in q:
+            q.remove(it)
+            heapq.heapify(q)
+            self.counters["cancelled"] += 1
+            return
+        key = next((k for k, v in self._inflight.items() if v is it), None)
+        if key is not None:
+            tier, eng_i, rid = key
+            eng = self.pools[tier][eng_i]
+            if not eng.dead:
+                eng.preempt(rid)     # free slot + pages; progress dropped
+            del self._inflight[key]
+        self.counters["cancelled"] += 1
 
 
 __all__ = ["TierScheduler", "Completion", "Shed", "SchedulerError",

@@ -1,0 +1,120 @@
+"""Direct unit tests for the deterministic fault injector: stall-window
+rotation, net-spike windows, seeded completion-drop determinism, and the
+hard-failure schedules (crashes, partitions) added for crash tolerance.
+Pure functions of virtual time — no engines, no JAX."""
+import numpy as np
+import pytest
+
+from repro.cluster.faults import FaultConfig, FaultInjector
+
+
+# ---------------------------------------------------------------------------
+# Stalls
+# ---------------------------------------------------------------------------
+
+def test_stall_window_and_rotation():
+    """Within each period the first ``stall_duration_s`` freezes exactly one
+    pool member, and the victim rotates across cycles."""
+    fi = FaultInjector(FaultConfig(stall_period_s=10.0, stall_duration_s=2.0))
+    # cycle 0 (t in [0, 10)): victim is member 0
+    assert fi.stalled("edge", 0, 1.0, pool_size=2)
+    assert not fi.stalled("edge", 1, 1.0, pool_size=2)
+    assert not fi.stalled("edge", 0, 5.0, pool_size=2)   # window over
+    # cycle 1: victim rotates to member 1
+    assert fi.stalled("edge", 1, 11.0, pool_size=2)
+    assert not fi.stalled("edge", 0, 11.0, pool_size=2)
+    assert fi.stall_hits == 2
+
+
+def test_stall_respects_start_and_tiers():
+    fi = FaultInjector(FaultConfig(stall_period_s=10.0, stall_duration_s=2.0,
+                                   stall_start_s=100.0,
+                                   stall_tiers=("edge",)))
+    assert not fi.stalled("edge", 0, 1.0)        # before stall_start_s
+    assert fi.stalled("edge", 0, 101.0)
+    assert not fi.stalled("cloud", 0, 101.0)     # unlisted tier never stalls
+
+
+# ---------------------------------------------------------------------------
+# Crashes
+# ---------------------------------------------------------------------------
+
+def test_crash_window_rotates_like_stalls():
+    fi = FaultInjector(FaultConfig(crash_period_s=8.0, crash_duration_s=1.0))
+    assert fi.crashed("edge", 0, 0.5, pool_size=2)
+    assert not fi.crashed("edge", 1, 0.5, pool_size=2)
+    assert not fi.crashed("edge", 0, 2.0, pool_size=2)   # window over
+    assert fi.crashed("edge", 1, 8.5, pool_size=2)       # rotated victim
+    assert fi.crash_hits == 2
+
+
+def test_crash_rotate_false_pins_member_zero():
+    """The one-flaky-node pattern: every crash lands on pool member 0, the
+    case per-engine circuit breakers exist for."""
+    fi = FaultInjector(FaultConfig(crash_period_s=5.0, crash_duration_s=1.0,
+                                   crash_rotate=False))
+    for cycle in range(4):
+        t = 5.0 * cycle + 0.25
+        assert fi.crashed("edge", 0, t, pool_size=3)
+        assert not fi.crashed("edge", 1, t, pool_size=3)
+        assert not fi.crashed("edge", 2, t, pool_size=3)
+
+
+def test_crash_respects_start_and_tiers():
+    fi = FaultInjector(FaultConfig(crash_period_s=5.0, crash_duration_s=1.0,
+                                   crash_start_s=20.0,
+                                   crash_tiers=("cloud",)))
+    assert not fi.crashed("cloud", 0, 0.5)
+    assert fi.crashed("cloud", 0, 20.5)
+    assert not fi.crashed("edge", 0, 20.5)
+
+
+def test_crash_disabled_by_default():
+    fi = FaultInjector(FaultConfig())
+    assert not fi.crashed("edge", 0, 1.0)
+    assert not fi.partitioned(1.0)
+    assert fi.crash_hits == 0 and fi.partition_hits == 0
+
+
+# ---------------------------------------------------------------------------
+# Partitions
+# ---------------------------------------------------------------------------
+
+def test_partition_window_phases():
+    fi = FaultInjector(FaultConfig(partition_period_s=10.0,
+                                   partition_duration_s=3.0,
+                                   partition_start_s=5.0))
+    assert not fi.partitioned(4.0)     # before start
+    assert fi.partitioned(5.5)         # inside first window
+    assert fi.partitioned(7.9)
+    assert not fi.partitioned(8.5)     # healed
+    assert fi.partitioned(15.5)        # next cycle
+    assert fi.partition_hits == 3
+
+
+# ---------------------------------------------------------------------------
+# Net spikes and drops
+# ---------------------------------------------------------------------------
+
+def test_net_spike_window():
+    fi = FaultInjector(FaultConfig(net_spike_period_s=4.0,
+                                   net_spike_duration_s=1.0,
+                                   net_spike_extra_s=0.7))
+    assert fi.net_spike(0.5) == pytest.approx(0.7)
+    assert fi.net_spike(2.0) == 0.0
+    assert fi.net_spike(4.5) == pytest.approx(0.7)
+
+
+def test_drop_determinism_under_seed():
+    """Same seed -> identical drop sequence; different seed -> (almost
+    surely) different; rate approximates the configured probability."""
+    a = FaultInjector(FaultConfig(drop_completion_p=0.3, seed=7))
+    b = FaultInjector(FaultConfig(drop_completion_p=0.3, seed=7))
+    c = FaultInjector(FaultConfig(drop_completion_p=0.3, seed=8))
+    draws_a = [a.drop_completion(t) for t in range(500)]
+    draws_b = [b.drop_completion(t) for t in range(500)]
+    draws_c = [c.drop_completion(t) for t in range(500)]
+    assert draws_a == draws_b
+    assert draws_a != draws_c
+    assert abs(np.mean(draws_a) - 0.3) < 0.08
+    assert a.dropped == sum(draws_a)
