@@ -8,6 +8,15 @@ edge<->cloud partition — all driven by the deterministic
 :class:`~repro.cluster.faults.FaultInjector` schedules on one virtual
 clock, so every case replays bit-identically per seed.
 
+The hand-authored schedules here are fixed event TIMELINES: each
+``FaultConfig`` period/duration formula expands into explicit
+:class:`~repro.cluster.faults.FaultEvent` records (same windows, same
+victims as the original closed forms). The randomized counterpart —
+seeded schedules over the same event vocabulary, with per-pump invariant
+oracles and failing-trace shrinking — lives in ``benchmarks/dst_bench.py``
+(``make fuzz``). Every case additionally ends with an engine page-arena
+audit (``assert_quiescent``): no chaos schedule may leak KV pages.
+
 Cases:
 
 1. ``crash-requeue`` — a 2-engine edge pool with a rotating crash/restart
@@ -179,6 +188,11 @@ def run_sched_case(pools, specs, span_s: float, *,
         clock.advance(min(max(arrivals[0][0] - now, 0.05), 0.25)
                       if arrivals else 0.05)
 
+    # a drained case must leave every surviving engine's page arena clean:
+    # refcounts match slot mappings, free + cached + active == num_pages
+    for _, _, e in flat:
+        e.assert_quiescent()
+
     def lat(c):
         return c.queue_wait_s + c.time_in_engine_s
 
@@ -221,6 +235,9 @@ def run_cluster_case(*, smoke: bool, seed: int):
     cluster = EACOCluster(wiki_like(seed=seed), cfg, policy="eaco",
                           backend="engines", faults=faults)
     logs = cluster.run(steps)
+    for pool in cluster.sched.pools.values():
+        for e in pool:
+            e.assert_quiescent()
     ok = [l for l in logs if l.outcome == "ok"]
     return {
         "cluster": cluster,

@@ -115,6 +115,13 @@ def run(smoke: bool = False, steps: int = 0, seed: int = 0,
     emit(rows, "cluster_bench")
     if check:
         _check(rows, by_policy)
+        # shared pools served five policies back-to-back; every arena must
+        # end quiescent (refcounts match mappings, zero leaked pages)
+        for tier_name, pool in pools.items():
+            for e in pool:
+                e.assert_quiescent()
+        print("CLUSTER ARENA OK: all pool engines quiescent, page audits "
+              "clean after the full policy sweep")
     return rows
 
 

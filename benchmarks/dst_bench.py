@@ -1,0 +1,236 @@
+"""DST seed-sweep driver: randomized chaos schedules + always-on oracles.
+
+Where ``chaos_bench`` replays a handful of hand-authored fault schedules,
+this bench runs the :mod:`repro.cluster.dst` fuzzer: for each seed it
+generates a random timeline composing the full fault vocabulary (engine
+crash/restart, partition/heal, stalls, net-delay spikes, completion
+drops, knowledge-update bursts, arrival bursts, SLO-mix shifts), drives
+real engine pools + scheduler + knowledge layer through it on the virtual
+clock, and re-checks every invariant oracle after every pump: request
+conservation, generation-fence legality, breaker state-machine legality,
+monotone knowledge epochs (no unflagged ``stale_epoch`` completions),
+page-arena audit (free+cached+active == num_pages, refcount == slot
+mappings, zero leaks at quiescence), greedy token identity, and a
+virtual-time wedge guard.
+
+``--check`` gates:
+  * every seed in the sweep is green (any failure is auto-shrunk and the
+    minimized trace written under ``results/dst/`` for CI to upload);
+  * the sweep exercised the whole fault vocabulary and the recovery
+    machinery actually ran (crashes AND restarts, partition heals,
+    knowledge ships, deliveries);
+  * replaying recorded traces reproduces their oracle snapshot streams
+    BYTE-identically (canonical JSON compare);
+  * the fuzzer catches an intentionally planted bug (a skipped refcount
+    decrement), ddmin-shrinks the failing schedule to <= 5 events, the
+    minimized schedule still fails with the same oracle, and the same
+    schedule without the bug passes (the failure is the bug, not noise).
+
+Usage:  PYTHONPATH=src:. python benchmarks/dst_bench.py \
+            [--smoke] [--check] [--seed N] [--seeds K] [--bug NAME]
+        PYTHONPATH=src:. python benchmarks/dst_bench.py --replay TRACE.json
+        PYTHONPATH=src:. python benchmarks/dst_bench.py --shrink TRACE.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.cluster.dst import (
+    BUGS, DSTHarness, FaultEvent, generate_schedule, load_trace,
+    make_failure_predicate, replay_trace, run_dst, save_trace,
+    shrink_schedule,
+)
+
+TRACE_DIR = Path(__file__).resolve().parents[1] / "results" / "dst"
+
+
+def _sweep(harness, seed0: int, n_seeds: int, bug=None):
+    """Run ``n_seeds`` schedules; shrink + persist any failure."""
+    agg = {"seeds": n_seeds, "failures": 0, "pumps": 0, "events": 0,
+           "crashes": 0, "restarts": 0, "partitions": 0, "heals": 0,
+           "ships": 0, "defers": 0, "syncs": 0, "delivered": 0,
+           "dropped": 0, "shed": 0, "stale_served": 0, "hedged": 0,
+           "preempted": 0, "requeued_lost": 0}
+    kinds = set()
+    results = []
+    for s in range(seed0, seed0 + n_seeds):
+        res = run_dst(s, harness=harness, bug=bug)
+        results.append(res)
+        agg["pumps"] += res.n_pumps
+        agg["events"] += len(res.events)
+        kinds.update(e.kind for e in res.events)
+        for k in ("crashes", "restarts", "partitions", "heals", "ships",
+                  "defers", "syncs", "delivered", "dropped", "shed",
+                  "stale_served"):
+            agg[k] += res.ledger[k]
+        for k in ("hedged", "preempted", "requeued_lost"):
+            agg[k] += res.counters[k]
+        if res.failure is not None:
+            agg["failures"] += 1
+            print(f"  seed {s} FAILED [{res.failure_oracle}]: "
+                  f"{res.failure[:160]}")
+            pred = make_failure_predicate(harness, inj_seed=s, bug=bug,
+                                          oracle=res.failure_oracle)
+            mini = shrink_schedule(res.events, pred)
+            mres = harness.run(mini, seed=s, inj_seed=s, bug=bug)
+            path = save_trace(mres, str(TRACE_DIR / f"seed{s}.min.json"))
+            print(f"  seed {s}: shrunk {len(res.events)} -> {len(mini)} "
+                  f"events; minimized trace at {path}")
+    agg["kinds_covered"] = len(kinds)
+    return agg, results
+
+
+def run_drill(harness, seed0: int):
+    """Plant the skipped-refcount-decrement bug, prove the fuzzer catches
+    it, shrink to a minimal repro, and verify the minimized schedule is
+    the bug (fails with it, passes without it)."""
+    drill = {"name": "drill-leak_page", "caught_seed": None,
+             "events_before": 0, "events_after": 0,
+             "min_still_fails": False, "clean_passes": False,
+             "oracle": None}
+    for s in range(seed0, seed0 + 10):
+        events = generate_schedule(s, harness.cfg)
+        res = harness.run(events, seed=s, inj_seed=s, bug="leak_page")
+        if res.failure is not None:
+            drill["caught_seed"] = s
+            drill["oracle"] = res.failure_oracle
+            drill["events_before"] = len(events)
+            pred = make_failure_predicate(harness, inj_seed=s,
+                                          bug="leak_page",
+                                          oracle=res.failure_oracle)
+            mini = shrink_schedule(events, pred)
+            drill["events_after"] = len(mini)
+            mres = harness.run(mini, seed=s, inj_seed=s, bug="leak_page")
+            drill["min_still_fails"] = (
+                mres.failure_oracle == res.failure_oracle)
+            clean = harness.run(mini, seed=s, inj_seed=s)
+            drill["clean_passes"] = clean.failure is None
+            save_trace(mres, str(TRACE_DIR / "drill_leak_page.min.json"))
+            break
+    return drill
+
+
+def run(quick: bool = False, check: bool = False, seed: int = 0,
+        n_seeds=None, bug=None):
+    n_seeds = (8 if quick else 50) if n_seeds is None else n_seeds
+    harness = DSTHarness()
+    print(f"dst sweep: {n_seeds} seeds from {seed}"
+          + (f" with planted bug {bug!r}" if bug else ""))
+    agg, results = _sweep(harness, seed, n_seeds, bug=bug)
+
+    n_replay = min(2 if quick else 3, len(results))
+    replay = {"name": "replay", "replayed": 0, "matched": 0}
+    for res in results[:n_replay]:
+        _, ok = replay_trace(res.trace(), harness)
+        replay["replayed"] += 1
+        replay["matched"] += int(ok)
+
+    drill = run_drill(harness, seed)
+
+    rows = [dict(name="sweep", **agg), replay, drill]
+    emit(rows, "dst_bench")
+
+    if not check:
+        return 0
+
+    failures = []
+
+    def gate(cond, msg):
+        print(f"  [{'PASS' if cond else 'FAIL'}] {msg}")
+        if not cond:
+            failures.append(msg)
+
+    print("dst gates:")
+    gate(agg["failures"] == 0,
+         f"all {n_seeds} seeds green, every oracle, every pump "
+         f"({agg['pumps']} pumps checked; {agg['failures']} failures)")
+    gate(agg["kinds_covered"] >= 8,
+         f"schedules cover the full event vocabulary "
+         f"({agg['kinds_covered']}/8 kinds)")
+    gate(agg["crashes"] >= 1 and agg["restarts"] >= 1,
+         f"crash/restart machinery exercised "
+         f"({agg['crashes']}/{agg['restarts']})")
+    gate(agg["partitions"] >= 1 and agg["heals"] >= 1,
+         f"partition/heal exercised ({agg['partitions']}/{agg['heals']})")
+    gate(agg["ships"] >= 1 and agg["delivered"] >= 1,
+         f"knowledge ships and deliveries occurred "
+         f"({agg['ships']} ships, {agg['delivered']} delivered)")
+    gate(replay["matched"] == replay["replayed"] and replay["replayed"] > 0,
+         f"replay-from-trace byte-identical "
+         f"({replay['matched']}/{replay['replayed']})")
+    gate(drill["caught_seed"] is not None,
+         f"planted refcount-decrement bug caught by oracle "
+         f"{drill['oracle']} (seed {drill['caught_seed']})")
+    gate(0 < drill["events_after"] <= 5,
+         f"failing schedule shrunk to <= 5 events "
+         f"({drill['events_before']} -> {drill['events_after']})")
+    gate(drill["min_still_fails"],
+         "minimized schedule still fails with the same oracle")
+    gate(drill["clean_passes"],
+         "minimized schedule passes without the planted bug")
+
+    if failures:
+        print(f"{len(failures)} gate(s) FAILED")
+        return 1
+    print("all dst gates passed")
+    return 0
+
+
+def do_replay(path: str) -> int:
+    trace = load_trace(path)
+    res, ok = replay_trace(trace, DSTHarness())
+    print(f"replayed {len(trace['events'])} events, "
+          f"{res.n_pumps} pumps, outcome "
+          f"{res.failure_oracle or 'green'} "
+          f"(recorded: {trace.get('failure_oracle') or 'green'})")
+    print("byte-identical snapshots" if ok else "SNAPSHOT MISMATCH")
+    return 0 if ok else 1
+
+
+def do_shrink(path: str) -> int:
+    trace = load_trace(path)
+    harness = DSTHarness()
+    events = [FaultEvent.from_dict(d) for d in trace["events"]]
+    pred = make_failure_predicate(
+        harness, inj_seed=int(trace.get("inj_seed", 0)),
+        bug=trace.get("bug"), oracle=trace.get("failure_oracle"))
+    mini = shrink_schedule(events, pred, log=print)
+    res = harness.run(mini, seed=trace.get("seed"),
+                      inj_seed=int(trace.get("inj_seed", 0)),
+                      bug=trace.get("bug"))
+    out = str(Path(path).with_suffix("")) + ".min.json"
+    save_trace(res, out)
+    print(f"shrunk {len(events)} -> {len(mini)} events; minimized trace "
+          f"at {out}")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep (8 seeds)")
+    ap.add_argument("--check", action="store_true",
+                    help="evaluate acceptance gates; exit 1 on failure")
+    ap.add_argument("--seed", type=int, default=0, help="first seed")
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="number of seeds (default 50; 8 with --smoke)")
+    ap.add_argument("--bug", choices=BUGS, default=None,
+                    help="plant a known bug and watch the fuzzer find it")
+    ap.add_argument("--replay", metavar="TRACE",
+                    help="replay a recorded trace; exit 1 on divergence")
+    ap.add_argument("--shrink", metavar="TRACE",
+                    help="ddmin-minimize a failing recorded trace")
+    args = ap.parse_args(argv)
+    if args.replay:
+        return do_replay(args.replay)
+    if args.shrink:
+        return do_shrink(args.shrink)
+    return run(quick=args.smoke, check=args.check, seed=args.seed,
+               n_seeds=args.seeds, bug=args.bug)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

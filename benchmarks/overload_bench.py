@@ -186,6 +186,7 @@ def run(quick: bool = False, check: bool = False, seed: int = 0):
     rows, results = [], {}
     for name, kw in cases:
         res = run_case(eng, specs, **kw)
+        eng.assert_quiescent()   # drained case must leave zero leaked pages
         eng.invalidate_prefix_cache()
         mismatched = sum(
             c.text != ref_texts[res["index"][id(c.request)]]
@@ -242,6 +243,9 @@ def run(quick: bool = False, check: bool = False, seed: int = 0):
         gate(p95_pre < p95_base,
              f"2x: preemption beats baseline p95 "
              f"({p95_pre:.3f}s < {p95_base:.3f}s)")
+        eng.assert_quiescent()
+        gate(eng.audit()["active"] == 0,
+             "engine quiescent after all cases: page audit clean, no leaks")
         print("overload_bench check:", "PASS" if ok else "FAIL")
         return 0 if ok else 1
     return 0

@@ -117,6 +117,7 @@ def run(quick: bool = False, n_requests: int = 64, max_batch: int = 8,
 
     tok_s, wall_s, lat_s = run_static(eng, reqs)
     tok_c, wall_c, lat_c = run_continuous(eng, reqs)
+    eng.assert_quiescent()   # page arena must be leak-free after the stream
     retraces = eng.trace_counts["decode"] - traces0["decode"]
 
     speedup = (tok_c / wall_c) / (tok_s / wall_s)
@@ -144,7 +145,7 @@ def run(quick: bool = False, n_requests: int = 64, max_batch: int = 8,
                   f"tokens {tok_s} vs {tok_c} (must match)")
             sys.exit(1)
         print(f"CHECK OK: speedup={speedup:.2f} (>={need}), zero decode "
-              f"retraces, token counts match")
+              f"retraces, token counts match, page arenas quiescent")
         _check_paged(rows, quick)
         _check_prefix(rows, quick)
     return rows
@@ -173,6 +174,7 @@ def run_paged_vs_contiguous(*, n_requests: int, base_batch: int,
     for name, e in (("kv-contiguous", cont), ("kv-paged", paged)):
         t0 = dict(e.trace_counts)
         tokens, wall, lat = run_continuous(e, reqs)
+        e.assert_quiescent()
         rows.append(_row(
             name, tokens, wall, lat,
             max_batch=e.max_batch,
@@ -235,6 +237,7 @@ def run_prefix_scenarios(*, n_requests: int, max_batch: int, max_seq: int,
             t0 = time.perf_counter()
             texts, stats = eng.generate(reqs)
             wall = time.perf_counter() - t0
+            eng.assert_quiescent()
             outs[mode] = texts
             prefill_tput = (stats.prompt_tokens / stats.prefill_s
                             if stats.prefill_s > 0 else 0.0)

@@ -1,4 +1,11 @@
-from repro.cluster.faults import FaultConfig, FaultInjector
+from repro.cluster.dst import (
+    DSTConfig, DSTHarness, DSTResult, DSTViolation, generate_schedule,
+    load_trace, replay_trace, run_dst, save_trace, shrink_schedule,
+)
+from repro.cluster.faults import (
+    FAULT_KINDS, FaultConfig, FaultEvent, FaultInjector,
+    TimelineFaultInjector,
+)
 from repro.cluster.network import NetworkConfig, NetworkModel
 from repro.cluster.oracle import AccuracyOracle, ArmQuality, DEFAULT_QUALITY
 from repro.cluster.simulator import EACOCluster, SimConfig, StepLog
@@ -8,5 +15,9 @@ __all__ = [
     "NetworkModel", "NetworkConfig", "AccuracyOracle", "ArmQuality",
     "DEFAULT_QUALITY", "EACOCluster", "SimConfig", "StepLog",
     "WorkloadGenerator", "WorkloadConfig", "QueryEvent",
-    "FaultInjector", "FaultConfig",
+    "FaultInjector", "FaultConfig", "FaultEvent", "TimelineFaultInjector",
+    "FAULT_KINDS",
+    "DSTConfig", "DSTHarness", "DSTResult", "DSTViolation",
+    "generate_schedule", "run_dst", "replay_trace", "shrink_schedule",
+    "save_trace", "load_trace",
 ]

@@ -1,0 +1,828 @@
+"""Deterministic simulation testing (DST) for the tiered serving stack.
+
+FoundationDB/TigerBeetle-style correctness machinery: instead of a handful
+of hand-authored chaos schedules checked at bench endpoints, a seeded
+generator *samples* arbitrary overlapping fault/workload timelines on the
+virtual clock, an invariant-oracle layer re-checks the whole stack's
+safety contracts after **every** pump, every run records a replayable JSON
+trace, and a delta-debugging shrinker minimizes any failing schedule to a
+small repro artifact. Four pieces:
+
+1. :func:`generate_schedule` — samples the full fault vocabulary (engine
+   crash/restart, partition/heal, stalls, net-delay spikes, completion
+   drops, knowledge-update bursts, arrival bursts, SLO-mix shifts) as
+   :class:`~repro.cluster.faults.FaultEvent` timelines. Same seed, same
+   schedule, byte for byte.
+2. :class:`DSTHarness` — drives real :class:`ServingEngine` pools through
+   a real :class:`TierScheduler` (preemption, requeue-on-crash, breakers,
+   edge->cloud hedging) plus the real epoch-versioned knowledge layer,
+   with a :class:`TimelineFaultInjector` applying the schedule — the same
+   closed loop the cluster simulator runs, minus the gate. All pool
+   members are replicas (same weights seed), so greedy output is
+   token-comparable across restarts, hedges and pool members.
+3. The oracle layer (checked after every pump): request conservation
+   (scheduler counters AND a harness-side ledger), generation-fence
+   legality, breaker state-machine legality, monotone knowledge epochs
+   with no unflagged ``stale_epoch`` completions, per-engine page-arena
+   audit (free + cached + active == ``num_pages``; refcount == slot
+   mappings; zero leaks at quiescence), token-identity of every
+   completion against the uncontended greedy reference, and a
+   virtual-time wedge (liveness) guard.
+4. :func:`shrink_schedule` — ddmin over the event list (plus per-burst
+   request shrinking), so "seed 1234 fails" becomes "these 2 events
+   fail", and :func:`replay_trace` — re-run a recorded trace and demand
+   byte-identical oracle snapshots.
+
+Everything downstream (chunked prefill, speculative decoding, multi-host
+arena) is expected to run under this fuzzer before it ships: the oracles
+are the contracts those PRs must keep. Drive it via
+``benchmarks/dst_bench.py`` (``make fuzz SEED=… SEEDS=…``,
+``make fuzz-smoke``, ``--replay``/``--shrink`` on saved traces).
+"""
+from __future__ import annotations
+
+import json
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.faults import FAULT_KINDS, FaultEvent, TimelineFaultInjector
+from repro.core.clock import VirtualClock
+from repro.core.cost_model import (
+    PAPER_CLOUD, PAPER_EDGE, modeled_decode_round_s, modeled_prefill_s,
+)
+from repro.core.knowledge import AdaptiveKnowledgeUpdater, KnowledgeUpdateConfig
+from repro.serving import Request, TierScheduler, make_edge_engine
+from repro.serving.health import CLOSED, HALF_OPEN, OPEN
+from repro.serving.paging import PagingError
+from repro.retrieval.store import VectorStore
+
+WORKLOAD_KINDS = ("arrivals", "knowledge", "slo_shift")
+TIER_SPEC = {"edge": PAPER_EDGE, "cloud": PAPER_CLOUD}
+TRACE_VERSION = 1
+
+# intentionally plantable bugs for fuzzer drills: each must be caught by
+# an oracle and shrink to a tiny schedule (the acceptance test for the
+# whole DST loop — if the fuzzer can't find a bug we planted, it won't
+# find one we didn't)
+BUGS = ("leak_page", "epoch_regress", "breaker_jump")
+
+
+class DSTViolation(RuntimeError):
+    """An invariant oracle failed. Carries the oracle's name and the
+    snapshot taken at the violating pump (recorded into the trace)."""
+
+    def __init__(self, message: str, oracle: str, snapshot: dict):
+        super().__init__(message)
+        self.oracle = oracle
+        self.snapshot = snapshot
+
+
+@dataclass
+class DSTConfig:
+    """Topology + schedule-intensity knobs for one DST universe."""
+    horizon_s: float = 24.0           # schedule window on the virtual clock
+    # ---- topology ------------------------------------------------------
+    n_edge_engines: int = 2
+    n_cloud_engines: int = 1
+    n_edges: int = 2                  # knowledge stores (edge sites)
+    max_seq: int = 128
+    max_batch: int = 2
+    page_size: int = 16
+    num_pages: int = 12               # < max_batch*pages_per_slot: page
+    #                                   pressure so CoW/LRU paths execute
+    store_capacity: int = 40
+    # ---- scheduler knobs ------------------------------------------------
+    breaker_threshold: int = 2
+    breaker_reset_s: float = 4.0
+    hedge_s: Optional[float] = 2.0
+    request_timeout_s: float = 8.0
+    interactive_slo_s: float = 20.0
+    batch_slo_s: float = 60.0
+    # ---- schedule intensity (Poisson means over the horizon) ------------
+    mean_arrival_bursts: float = 4.0
+    burst_max: int = 3                # requests per burst
+    mean_crashes: float = 2.0
+    mean_stalls: float = 1.5
+    mean_partitions: float = 1.0
+    mean_spikes: float = 1.0
+    mean_drops: float = 1.0
+    mean_knowledge: float = 2.5
+    mean_slo_shifts: float = 1.0
+    # ---- oracle knobs ---------------------------------------------------
+    check_token_identity: bool = True
+    wedge_idle_s: float = 40.0        # virtual idle with zero progress
+
+
+# ---------------------------------------------------------------------------
+# 1. Schedule generation
+# ---------------------------------------------------------------------------
+def generate_schedule(seed: int, cfg: Optional[DSTConfig] = None
+                      ) -> List[FaultEvent]:
+    """Sample one random schedule: overlapping fault windows + workload
+    events over ``cfg.horizon_s`` virtual seconds. Pure function of
+    ``(seed, cfg)`` — all draws come from one ``default_rng(seed)`` and
+    every value is rounded to plain JSON-exact Python scalars, so the
+    schedule regenerates byte-identically and round-trips through trace
+    files."""
+    cfg = cfg or DSTConfig()
+    rng = np.random.default_rng(seed)
+    h = cfg.horizon_s
+    events: List[FaultEvent] = []
+
+    def U(a: float, b: float) -> float:
+        return round(float(rng.uniform(a, b)), 4)
+
+    def N(mean: float) -> int:
+        return int(rng.poisson(mean))
+
+    # arrival bursts (at least one — a schedule with no work tests nothing)
+    for _ in range(max(1, N(cfg.mean_arrival_bursts))):
+        t = U(0.0, 0.8 * h)           # leave tail room to drain
+        reqs = []
+        for _ in range(int(rng.integers(1, cfg.burst_max + 1))):
+            reqs.append({
+                "plen": int(rng.integers(12, 40)),
+                "new": int(rng.integers(4, 17)),
+                "pseed": int(rng.integers(0, 2**31 - 1)),
+                # u vs the runtime interactive fraction decides the SLO
+                # class at submit time, so slo_shift events stay shrinkable
+                "u": round(float(rng.random()), 6),
+                "edge": int(rng.integers(0, cfg.n_edges)),
+                "tier": "edge" if rng.random() < 0.85 else "cloud",
+            })
+        events.append(FaultEvent(t, "arrivals", params={"reqs": reqs}))
+    for _ in range(N(cfg.mean_crashes)):
+        tier = "edge" if rng.random() < 0.8 else "cloud"
+        pool = cfg.n_edge_engines if tier == "edge" else cfg.n_cloud_engines
+        events.append(FaultEvent(U(0.0, h), "crash", duration=U(0.5, 3.0),
+                                 tier=tier,
+                                 engine=int(rng.integers(0, pool))))
+    for _ in range(N(cfg.mean_stalls)):
+        events.append(FaultEvent(
+            U(0.0, h), "stall", duration=U(0.5, 3.0), tier="edge",
+            engine=int(rng.integers(0, cfg.n_edge_engines))))
+    for _ in range(N(cfg.mean_partitions)):
+        events.append(FaultEvent(U(0.0, h), "partition",
+                                 duration=U(1.0, 5.0)))
+    for _ in range(N(cfg.mean_spikes)):
+        events.append(FaultEvent(U(0.0, h), "net_spike",
+                                 duration=U(0.5, 3.0),
+                                 magnitude=U(0.1, 1.0)))
+    for _ in range(N(cfg.mean_drops)):
+        events.append(FaultEvent(U(0.0, h), "drop", duration=U(0.5, 2.0),
+                                 magnitude=float(rng.choice([0.5, 1.0]))))
+    for _ in range(N(cfg.mean_knowledge)):
+        events.append(FaultEvent(U(0.0, h), "knowledge", params={
+            "edge": int(rng.integers(0, cfg.n_edges)),
+            "qseed": int(rng.integers(0, 2**31 - 1))}))
+    for _ in range(N(cfg.mean_slo_shifts)):
+        events.append(FaultEvent(U(0.0, h), "slo_shift",
+                                 magnitude=round(float(rng.random()), 4)))
+    events.sort(key=lambda e: (e.t, e.kind))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# Results / traces
+# ---------------------------------------------------------------------------
+@dataclass
+class DSTResult:
+    seed: Optional[int]
+    inj_seed: int
+    bug: Optional[str]
+    events: List[FaultEvent]
+    snapshots: List[dict]
+    failure: Optional[str]            # human message, None when green
+    failure_oracle: Optional[str]     # which oracle fired
+    counters: Dict[str, int]          # final scheduler counters
+    ledger: Dict[str, int]            # harness-side event/outcome ledger
+    makespan_s: float = 0.0
+    n_pumps: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return self.failure is None
+
+    def trace(self) -> dict:
+        """JSON-serializable record of the run: the schedule, every oracle
+        snapshot, and the outcome — sufficient for byte-identical replay
+        (:func:`replay_trace`) and for shrinking."""
+        return {
+            "version": TRACE_VERSION, "seed": self.seed,
+            "inj_seed": self.inj_seed, "bug": self.bug,
+            "failure": self.failure, "failure_oracle": self.failure_oracle,
+            "events": [e.to_dict() for e in self.events],
+            "snapshots": self.snapshots,
+            "counters": dict(self.counters), "ledger": dict(self.ledger),
+            "makespan_s": self.makespan_s, "n_pumps": self.n_pumps,
+        }
+
+
+def save_trace(result: DSTResult, path: str) -> str:
+    import os
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(result.trace(), f, indent=1, sort_keys=True)
+    return path
+
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# 2. The harness
+# ---------------------------------------------------------------------------
+class DSTHarness:
+    """Owns the (expensive) engine pools and replays any schedule through
+    a FRESH scheduler + knowledge layer per run. Engines are recycled
+    between runs via crash()+restart() — by the crash contract that is a
+    cold engine (empty arena, fresh allocator/prefix index, no retrace),
+    so run N+1 starts from the same state run N did. Oracle snapshots
+    deliberately contain only run-local quantities (no engine-cumulative
+    counters, no raw request/generation ids), which is what makes
+    replay-from-trace byte-identical on reused pools."""
+
+    def __init__(self, cfg: Optional[DSTConfig] = None, *,
+                 pools: Optional[Dict[str, list]] = None):
+        self.cfg = cfg or DSTConfig()
+        c = self.cfg
+        ekw = dict(max_seq=c.max_seq, max_batch=c.max_batch, seed=0,
+                   kv_layout="paged", page_size=c.page_size,
+                   num_pages=c.num_pages, prefix_cache=True)
+        if pools is not None:
+            self.pools = pools
+        else:
+            # every member (both tiers) is a replica of the same reduced
+            # edge SLM: token identity must hold across pool members,
+            # restarts and hedged re-serves, which needs identical weights
+            self.pools = {
+                "edge": [make_edge_engine(**ekw)
+                         for _ in range(c.n_edge_engines)],
+                "cloud": [make_edge_engine(**ekw)
+                          for _ in range(c.n_cloud_engines)],
+            }
+        # uncontended reference engine for greedy token identity (roomy
+        # default page pool: the reference must never preempt or shed)
+        self.ref_engine = make_edge_engine(
+            max_seq=c.max_seq, max_batch=c.max_batch, seed=0,
+            kv_layout="paged", page_size=c.page_size, prefix_cache=True)
+        self._ref_cache: Dict[Tuple[str, int], str] = {}
+        self._corpus = None
+        self._graph = None
+
+    # ---- shared read-only knowledge substrate -------------------------
+    def _knowledge_substrate(self):
+        if self._graph is None:
+            from repro.data.corpus import wiki_like
+            from repro.retrieval.graph_rag import KnowledgeGraph
+            self._corpus = wiki_like(seed=0)
+            self._graph = KnowledgeGraph(seed=0).build(self._corpus.chunks)
+        return self._corpus, self._graph
+
+    def _fresh_stores(self) -> Dict[str, VectorStore]:
+        corpus, _ = self._knowledge_substrate()
+        topics = sorted({c.topic for c in corpus.chunks})
+        stores: Dict[str, VectorStore] = {}
+        for i in range(self.cfg.n_edges):
+            st = VectorStore(capacity=self.cfg.store_capacity)
+            st.add(corpus.chunks_for_topic(topics[i % len(topics)])
+                   [: self.cfg.store_capacity // 2])
+            stores[f"edge{i}"] = st
+        return stores
+
+    def _kquery(self, qseed: int) -> str:
+        corpus, _ = self._knowledge_substrate()
+        ch = corpus.chunks[qseed % len(corpus.chunks)]
+        return " ".join(ch.keywords[:4]) if ch.keywords else ch.text[:40]
+
+    # ---- request materialization --------------------------------------
+    @staticmethod
+    def _prompt(spec: dict) -> str:
+        rng = np.random.default_rng(spec["pseed"])
+        # per-edge shared header exercises prefix sharing/CoW across the
+        # burst; the unique tail forces a suffix prefill
+        head = f"site{spec['edge']} ctx " * 2
+        tail = "".join(rng.choice(list("abcdefgh "), spec["plen"]))
+        return (head + tail)[: 96]
+
+    def _reference_text(self, spec: dict) -> str:
+        key = (self._prompt(spec), int(spec["new"]))
+        if key not in self._ref_cache:
+            texts, _ = self.ref_engine.generate(
+                [Request(key[0], max_new_tokens=key[1])])
+            self._ref_cache[key] = texts[0]
+        return self._ref_cache[key]
+
+    def _reset_pools(self) -> None:
+        for pool in self.pools.values():
+            for e in pool:
+                if not e.dead:
+                    e.crash()
+                e.restart()
+
+    # ---- bug planting (fuzzer drills) ---------------------------------
+    def _install_bug(self, bug: Optional[str]) -> None:
+        self._bug_epoch_regress = bug == "epoch_regress"
+        self._bug_breaker_jump = bug == "breaker_jump"
+        if bug is None or bug in ("epoch_regress", "breaker_jump"):
+            return
+        if bug != "leak_page":
+            raise ValueError(f"unknown bug {bug!r}; known: {BUGS}")
+        # skip one refcount decrement on the first free issued by edge
+        # engine 0 — the classic leaked-page bug the page-arena oracle
+        # exists for. Installed on the run-local allocator (restart()
+        # replaces it), so nothing to restore afterwards.
+        e = self.pools["edge"][0]
+        alloc = e._allocator
+        orig = alloc.free
+        armed = [True]
+
+        def bad_free(ids, retain=None):
+            ids = list(ids)
+            if armed[0] and ids:
+                armed[0] = False
+                ids = ids[1:]
+            return orig(ids, retain)
+
+        alloc.free = bad_free
+
+    # ---- the run loop --------------------------------------------------
+    def run(self, events: Sequence[FaultEvent], *, seed: Optional[int] = None,
+            inj_seed: int = 0, bug: Optional[str] = None) -> DSTResult:
+        cfg = self.cfg
+        self._reset_pools()
+        self._install_bug(bug)
+        clock = VirtualClock()
+        inj = TimelineFaultInjector(
+            [e for e in events if e.kind in FAULT_KINDS], seed=inj_seed)
+        work = deque(e for e in events if e.kind in WORKLOAD_KINDS)
+        end_t = max((e.t + e.duration for e in events), default=0.0)
+        # timeline boundaries (window starts/ends): idle ticks jump to the
+        # next one so quiet stretches don't burn thousands of no-op pumps
+        bounds = sorted({e.t for e in events}
+                        | {e.t + e.duration for e in events})
+        sched = TierScheduler(
+            self.pools, clock=clock, preempt=True, shed_overdue=True,
+            request_timeout_s=cfg.request_timeout_s, requeue_lost=True,
+            breaker_threshold=cfg.breaker_threshold,
+            breaker_reset_s=cfg.breaker_reset_s,
+            hedge_s=cfg.hedge_s, hedge_from="edge", hedge_to="cloud",
+            hedge_gate=lambda now: not inj.partitioned(now))
+        _, graph = self._knowledge_substrate()
+        updater = AdaptiveKnowledgeUpdater(graph, KnowledgeUpdateConfig(
+            update_trigger=1, max_chunks_per_update=12,
+            top_k_communities=2, recent_window=8))
+        stores = self._fresh_stores()
+        slack = {"interactive": cfg.interactive_slo_s,
+                 "batch": cfg.batch_slo_s}
+        ledger: Dict[str, int] = {
+            "submitted": 0, "delivered": 0, "dropped": 0, "shed": 0,
+            "stale_served": 0, "knowledge_events": 0, "ships": 0,
+            "defers": 0, "syncs": 0, "invalidations": 0, "crashes": 0,
+            "restarts": 0, "partitions": 0, "heals": 0, "slo_shifts": 0}
+        meta: Dict[int, dict] = {}        # id(request) -> spec/outcome
+        self._interactive_frac = 0.5
+        self._link_down = False
+        self._crashed: set = set()
+        self._prev_breakers: Dict[tuple, str] = {}
+        self._prev_epochs: dict = {"latest": updater.latest_epoch,
+                                   "stores": {k: v.epoch
+                                              for k, v in stores.items()}}
+        if cfg.check_token_identity:
+            for ev in work:
+                if ev.kind == "arrivals":
+                    for spec in ev.params["reqs"]:
+                        self._reference_text(spec)
+
+        def apply_transitions(now: float) -> bool:
+            moved = False
+            for tier, pool in self.pools.items():
+                for i, e in enumerate(pool):
+                    want = inj.crashed(tier, i, now, len(pool))
+                    if want and not e.dead:
+                        e.crash()
+                        self._crashed.add((tier, i))
+                        ledger["crashes"] += 1
+                        moved = True
+                    elif not want and e.dead and (tier, i) in self._crashed:
+                        e.restart()
+                        self._crashed.discard((tier, i))
+                        ledger["restarts"] += 1
+                        moved = True
+            part = inj.partitioned(now)
+            if part and not self._link_down:
+                ledger["partitions"] += 1
+                moved = True
+            elif self._link_down and not part:
+                # heal: anti-entropy replays deferred refreshes; shipped
+                # chunks invalidate cached retrieved-context prefixes
+                for eid in sorted(stores):
+                    if updater.sync(eid, stores[eid], now=now):
+                        ledger["syncs"] += 1
+                        self._invalidate_edges(ledger)
+                ledger["heals"] += 1
+                moved = True
+            self._link_down = part
+            return moved
+
+        def apply_event(ev: FaultEvent, now: float) -> None:
+            if ev.kind == "arrivals":
+                for spec in ev.params["reqs"]:
+                    slo = ("interactive" if spec["u"] < self._interactive_frac
+                           else "batch")
+                    req = Request(self._prompt(spec),
+                                  max_new_tokens=int(spec["new"]), slo=slo)
+                    sched.submit(req, spec.get("tier", "edge"),
+                                 deadline_s=now + slack[slo], now=now)
+                    ledger["submitted"] += 1
+                    meta[id(req)] = {"spec": spec, "slo": slo}
+            elif ev.kind == "knowledge":
+                eid = f"edge{int(ev.params['edge']) % cfg.n_edges}"
+                before = stores[eid].epoch
+                updater.observe_query(eid, self._kquery(ev.params["qseed"]),
+                                      stores[eid], now=now,
+                                      link_up=not self._link_down)
+                ledger["knowledge_events"] += 1
+                if stores[eid].epoch != before:
+                    ledger["ships"] += 1
+                    self._invalidate_edges(ledger)
+                elif self._link_down:
+                    ledger["defers"] += 1
+                if self._bug_epoch_regress:
+                    updater.latest_epoch -= 2
+            elif ev.kind == "slo_shift":
+                self._interactive_frac = float(ev.magnitude)
+                ledger["slo_shifts"] += 1
+
+        snapshots: List[dict] = []
+        failure = failure_oracle = None
+        mismatches: List[dict] = []
+        idle_since: Optional[float] = None
+        while True:
+            now = clock.now()
+            moved = apply_transitions(now)
+            while work and work[0].t <= now:
+                apply_event(work.popleft(), now)
+                moved = True
+            if (not work and not sched.pending() and not sched.in_flight()
+                    and not self._crashed and now >= end_t):
+                break
+            flat = [(t, e) for t, pool in self.pools.items() for e in pool]
+            pre = [(e.prefill_tokens, e.decode_rounds) for _, e in flat]
+            before = (sched.pending(), sched.in_flight(),
+                      tuple(sched.counters.values()))
+
+            def stalled(tier, i, _now=now):
+                return inj.stalled(tier, i, _now, len(self.pools[tier]))
+
+            comps = sched.pump(now=now, stalled=stalled)
+            if self._bug_breaker_jump and snapshots and sched.breakers:
+                # teleport a closed breaker straight to half_open (skipping
+                # open + the reset timeout) after the first snapshot has
+                # pinned its previous state — the legality oracle's target
+                b = next(iter(sched.breakers.values()))
+                if b.state(now) == CLOSED:
+                    b._state = HALF_OPEN
+            dt = 0.0
+            for (tier, e), (p0, r0) in zip(flat, pre):
+                spec = TIER_SPEC[tier]
+                dt = max(dt, modeled_prefill_s(spec, e.prefill_tokens - p0)
+                         + (e.decode_rounds - r0)
+                         * modeled_decode_round_s(spec))
+            if dt > 0:
+                clock.advance(dt)
+            t_done = clock.now()
+            comp_records = []
+            for c in comps:
+                m = meta.pop(id(c.request), None)
+                if m is None:
+                    continue                 # duplicate (can't happen; guard)
+                rec = {"tier": c.tier, "engine": c.engine_index,
+                       "slo": c.slo, "hedged": bool(c.hedged),
+                       "new_tokens": c.new_tokens,
+                       "preemptions": c.preemptions}
+                if (cfg.check_token_identity
+                        and c.text != self._reference_text(m["spec"])):
+                    mismatches.append(
+                        {"tier": c.tier, "engine": c.engine_index,
+                         "got": c.text,
+                         "want": self._reference_text(m["spec"])})
+                eid = f"edge{m['spec']['edge']}"
+                stale = updater.is_stale(stores[eid])
+                rec["stale"] = bool(stale)
+                rec["store"] = eid
+                if inj.drop_completion(t_done):
+                    ledger["dropped"] += 1
+                    rec["dropped"] = True
+                else:
+                    ledger["delivered"] += 1
+                    if stale:
+                        ledger["stale_served"] += 1
+                comp_records.append(rec)
+            for s in sched.pop_sheds():
+                meta.pop(id(s.request), None)
+                ledger["shed"] += 1
+            after = (sched.pending(), sched.in_flight(),
+                     tuple(sched.counters.values()))
+            try:
+                snap = self._check_oracles(
+                    sched, updater, stores, t_done, len(snapshots),
+                    comp_records, mismatches, ledger, meta)
+                snapshots.append(snap)
+            except DSTViolation as v:
+                snapshots.append(v.snapshot)
+                failure, failure_oracle = str(v), v.oracle
+                break
+            if moved or dt > 0 or after != before:
+                idle_since = None
+                continue
+            idle_since = t_done if idle_since is None else idle_since
+            if t_done - idle_since > cfg.wedge_idle_s:
+                failure = (f"wedge: no progress for {cfg.wedge_idle_s}s "
+                           f"virtual at t={t_done:.2f} with "
+                           f"{sched.pending()} queued / "
+                           f"{sched.in_flight()} resident")
+                failure_oracle = "wedge"
+                snapshots.append(
+                    {"t": t_done, "violations": [failure],
+                     "debug": sched.debug_state_dict(t_done)})
+                break
+            nxt = next((b for b in bounds if b > t_done + 1e-9),
+                       t_done + 0.25)
+            clock.advance(min(max(nxt - t_done, 0.05), 0.5))
+
+        if failure is None:
+            # quiescence: every live engine fully drained, zero page leaks
+            try:
+                for tier, pool in self.pools.items():
+                    for i, e in enumerate(pool):
+                        e.assert_quiescent()
+                if meta:
+                    raise DSTViolation(
+                        f"harness ledger: {len(meta)} request(s) neither "
+                        "completed, dropped, nor shed at quiescence",
+                        "conservation", {})
+            except DSTViolation as v:
+                failure, failure_oracle = str(v), v.oracle
+            except Exception as exc:  # noqa: BLE001 — any audit breach
+                failure = f"quiescence audit failed: {exc}"
+                failure_oracle = "page-audit"
+        return DSTResult(
+            seed=seed, inj_seed=inj_seed, bug=bug, events=list(events),
+            snapshots=snapshots, failure=failure,
+            failure_oracle=failure_oracle, counters=dict(sched.counters),
+            ledger=ledger, makespan_s=clock.now(), n_pumps=len(snapshots))
+
+    def _invalidate_edges(self, ledger: Dict[str, int]) -> None:
+        for e in self.pools["edge"]:
+            if not e.dead:
+                e.invalidate_prefix_cache()
+                ledger["invalidations"] += 1
+
+    # ---- 3. the oracle layer -------------------------------------------
+    def _check_oracles(self, sched: TierScheduler,
+                       updater: AdaptiveKnowledgeUpdater,
+                       stores: Dict[str, VectorStore], now: float,
+                       pump: int, comp_records: List[dict],
+                       mismatches: List[dict], ledger: Dict[str, int],
+                       meta: Dict[int, dict]) -> dict:
+        """Check every invariant; return the JSON snapshot for the trace
+        or raise :class:`DSTViolation`. Snapshots hold only run-local,
+        deterministic quantities — replaying the same schedule on reused
+        pools must reproduce them byte for byte."""
+        violations: List[str] = []
+        # 1. request conservation, scheduler side and harness side
+        if not sched.conservation_ok():
+            violations.append(
+                f"conservation: scheduler counters do not balance "
+                f"({sched.counters})")
+        outstanding = len(meta)
+        if (ledger["submitted"] != ledger["delivered"] + ledger["dropped"]
+                + ledger["shed"] + outstanding):
+            violations.append(
+                f"conservation: harness ledger does not balance ({ledger}, "
+                f"outstanding={outstanding})")
+        # 2. generation-fence legality
+        fences = []
+        for f in sched.resident_fences():
+            ok = not f["dead"] and f["admit_gen"] == f["engine_gen"]
+            fences.append([f["tier"], f["engine"], ok])
+            if not ok:
+                violations.append(
+                    f"fence: resident on {f['tier']}[{f['engine']}] "
+                    f"dead={f['dead']} admit_gen={f['admit_gen']} "
+                    f"engine_gen={f['engine_gen']}")
+        # 3. breaker state-machine legality
+        breakers = {}
+        for key, b in sched.breakers.items():
+            snap = b.snapshot(now)
+            cur, prev = snap["state"], self._prev_breakers.get(key)
+            name = f"{key[0]}:{key[1]}"
+            breakers[name] = snap
+            if prev == CLOSED and cur == HALF_OPEN:
+                violations.append(
+                    f"breaker: {name} teleported closed -> half_open")
+            if (prev == OPEN and cur == HALF_OPEN
+                    and now - b.opened_at + 1e-9 < b.reset_timeout_s):
+                violations.append(
+                    f"breaker: {name} opened at {b.opened_at:.3f} but "
+                    f"half_open at {now:.3f} < reset_timeout "
+                    f"{b.reset_timeout_s}")
+            if snap["failures"] < 0:
+                violations.append(f"breaker: {name} negative failure count")
+            self._prev_breakers[key] = cur
+        # 4. monotone knowledge epochs
+        ep = updater.snapshot(stores)
+        if ep["latest_epoch"] < self._prev_epochs["latest"]:
+            violations.append(
+                f"epoch: latest_epoch regressed "
+                f"{self._prev_epochs['latest']} -> {ep['latest_epoch']}")
+        for eid in sorted(stores):
+            cur = stores[eid].epoch
+            if cur < self._prev_epochs["stores"].get(eid, 0):
+                violations.append(
+                    f"epoch: store {eid} regressed "
+                    f"{self._prev_epochs['stores'][eid]} -> {cur}")
+            if cur > ep["latest_epoch"]:
+                violations.append(
+                    f"epoch: store {eid} epoch {cur} ahead of latest "
+                    f"{ep['latest_epoch']}")
+        if not self._link_down and updater.deferred:
+            violations.append(
+                f"epoch: deferred updates {sorted(updater.deferred)} "
+                "while the link is up (anti-entropy missed)")
+        self._prev_epochs = {"latest": ep["latest_epoch"],
+                             "stores": {k: v.epoch
+                                        for k, v in stores.items()}}
+        # 5. no unflagged stale-epoch completions (independent recompute)
+        for rec in comp_records:
+            truth = stores[rec["store"]].epoch < updater.latest_epoch
+            if truth and not rec["stale"]:
+                violations.append(
+                    f"epoch: completion from {rec['store']} served at "
+                    f"stale epoch without a stale_epoch flag")
+        # 6. page-arena audit on every live engine
+        pages = {}
+        for tier, pool in self.pools.items():
+            reports = []
+            for i, e in enumerate(pool):
+                try:
+                    reports.append(e.audit())
+                except PagingError as exc:
+                    reports.append({"error": str(exc)})
+                    violations.append(f"page-audit: {tier}[{i}]: {exc}")
+            pages[tier] = reports
+        # 7. greedy token identity (resumed/hedged/restarted re-serves)
+        for m in mismatches:
+            violations.append(
+                f"token-identity: {m['tier']}[{m['engine']}] diverged from "
+                f"the uncontended greedy reference "
+                f"({m['got']!r} != {m['want']!r})")
+        del mismatches[:]
+        snap = {"t": now, "pump": pump, "queued": sched.pending(),
+                "resident": sched.in_flight(),
+                "counters": dict(sched.counters), "fences": fences,
+                "breakers": breakers, "epochs": ep, "pages": pages,
+                "link_down": self._link_down, "ledger": dict(ledger),
+                "completions": comp_records}
+        if violations:
+            snap["violations"] = violations
+            raise DSTViolation("; ".join(violations),
+                               violations[0].split(":")[0], snap)
+        return snap
+
+
+# ---------------------------------------------------------------------------
+# Convenience entry points
+# ---------------------------------------------------------------------------
+def run_dst(seed: int, cfg: Optional[DSTConfig] = None,
+            harness: Optional[DSTHarness] = None,
+            bug: Optional[str] = None) -> DSTResult:
+    """Generate the schedule for ``seed`` and run it. Pass a shared
+    ``harness`` when sweeping many seeds — engine construction dominates
+    otherwise."""
+    harness = harness or DSTHarness(cfg)
+    events = generate_schedule(seed, harness.cfg)
+    return harness.run(events, seed=seed, inj_seed=seed, bug=bug)
+
+
+def replay_trace(trace: dict, harness: DSTHarness
+                 ) -> Tuple[DSTResult, bool]:
+    """Re-run a recorded trace's schedule and compare: same oracle, and
+    byte-identical snapshot stream (via canonical JSON). Returns
+    ``(result, matched)``."""
+    events = [FaultEvent.from_dict(d) for d in trace["events"]]
+    res = harness.run(events, seed=trace.get("seed"),
+                      inj_seed=int(trace.get("inj_seed", 0)),
+                      bug=trace.get("bug"))
+    matched = (res.failure_oracle == trace.get("failure_oracle")
+               and json.dumps(res.snapshots, sort_keys=True)
+               == json.dumps(trace["snapshots"], sort_keys=True))
+    return res, matched
+
+
+# ---------------------------------------------------------------------------
+# 4. Delta-debugging shrinker
+# ---------------------------------------------------------------------------
+def make_failure_predicate(harness: DSTHarness, *, inj_seed: int = 0,
+                           bug: Optional[str] = None,
+                           oracle: Optional[str] = None
+                           ) -> Callable[[Sequence[FaultEvent]], bool]:
+    """Predicate for :func:`shrink_schedule`: does this schedule still
+    fail (optionally: with the SAME oracle — shrinking must preserve the
+    bug, not swap it for a different one)?"""
+    def failing(events: Sequence[FaultEvent]) -> bool:
+        res = harness.run(events, inj_seed=inj_seed, bug=bug)
+        if res.failure is None:
+            return False
+        return oracle is None or res.failure_oracle == oracle
+    return failing
+
+
+def shrink_schedule(events: Sequence[FaultEvent],
+                    failing: Callable[[Sequence[FaultEvent]], bool], *,
+                    max_runs: int = 200,
+                    log: Optional[Callable[[str], None]] = None
+                    ) -> List[FaultEvent]:
+    """Zeller-style ddmin over the event list, then a 1-minimal polish
+    pass and per-burst request shrinking — minimizes a failing schedule
+    to a small repro while the predicate keeps failing. The predicate
+    must be deterministic (it is: runs are replayable), so the minimized
+    schedule is a guaranteed repro artifact."""
+    events = list(events)
+    if not failing(events):
+        raise ValueError("schedule does not fail; nothing to shrink")
+    runs = 0
+
+    def say(msg: str) -> None:
+        if log:
+            log(msg)
+
+    n = 2
+    while len(events) >= 2 and runs < max_runs:
+        chunk = math.ceil(len(events) / n)
+        reduced = False
+        for start in range(0, len(events), chunk):
+            cand = events[:start] + events[start + chunk:]
+            if not cand:
+                continue
+            runs += 1
+            if failing(cand):
+                events = cand
+                n = max(n - 1, 2)
+                reduced = True
+                say(f"shrink: {len(events)} events (dropped chunk "
+                    f"@{start}, {runs} runs)")
+                break
+            if runs >= max_runs:
+                break
+        if not reduced:
+            if n >= len(events):
+                break
+            n = min(n * 2, len(events))
+    # 1-minimal polish: no single remaining event can be dropped
+    i = 0
+    while i < len(events) and len(events) > 1 and runs < max_runs:
+        cand = events[:i] + events[i + 1:]
+        runs += 1
+        if failing(cand):
+            events = cand
+            say(f"shrink: {len(events)} events (polish)")
+        else:
+            i += 1
+    # payload shrink: drop single requests inside arrival bursts
+    changed = True
+    while changed and runs < max_runs:
+        changed = False
+        for idx, ev in enumerate(events):
+            if ev.kind != "arrivals":
+                continue
+            reqs = list(ev.params["reqs"])
+            j = 0
+            while len(reqs) > 1 and j < len(reqs) and runs < max_runs:
+                cand_reqs = reqs[:j] + reqs[j + 1:]
+                cand = list(events)
+                cand[idx] = FaultEvent(ev.t, "arrivals",
+                                       params={"reqs": cand_reqs})
+                runs += 1
+                if failing(cand):
+                    events, reqs = cand, cand_reqs
+                    ev = cand[idx]
+                    changed = True
+                    say(f"shrink: burst @{ev.t} down to {len(reqs)} reqs")
+                else:
+                    j += 1
+    return events
+
+
+__all__ = [
+    "DSTConfig", "DSTHarness", "DSTResult", "DSTViolation", "BUGS",
+    "generate_schedule", "run_dst", "replay_trace", "shrink_schedule",
+    "make_failure_predicate", "save_trace", "load_trace", "WORKLOAD_KINDS",
+]

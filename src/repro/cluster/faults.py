@@ -2,39 +2,54 @@
 
 Overload robustness is only proven if the loop survives the ugly cases:
 an engine that stops making progress, a network path whose latency spikes,
-a completion that never reaches the caller. :class:`FaultInjector` models
-all three as PURE functions of virtual time (plus one seeded RNG for
-completion drops), so a faulted simulation is exactly reproducible under a
-fixed seed — the same property the rest of the cluster keeps
-(``engine_time="modeled"``).
+a completion that never reaches the caller, a node that dies outright, a
+partitioned edge<->cloud link. All of them are modeled as PURE functions
+of virtual time (plus one seeded RNG for completion drops), so a faulted
+simulation is exactly reproducible under a fixed seed — the same property
+the rest of the cluster keeps (``engine_time="modeled"``).
 
-* **Engine stalls** — periodic windows: within each ``stall_period_s``
-  cycle, one pool member of each listed tier is frozen for
-  ``stall_duration_s`` (the victim rotates through the pool across
-  cycles). The scheduler's ``stalled`` hook skips the frozen engine for
-  admission and stepping; its residents stop accruing progress and — with
-  ``request_timeout_s`` set — are timed out, freeing slot and pages.
-* **Network delay spikes** — within each ``net_spike_period_s`` cycle the
-  first ``net_spike_duration_s`` adds ``net_spike_extra_s`` to the transit
-  delay of any completion finalized in the window (a congested uplink).
-* **Dropped completions** — each harvested completion is lost with
-  probability ``drop_completion_p`` (seeded RNG, one draw per completion):
-  the caller never sees the result and must treat the request like a shed
-  (retry / fail over), exercising the same recovery path as a lost RPC.
-* **Engine crashes** — periodic windows like stalls, but HARD: within each
-  ``crash_period_s`` cycle one pool member of each listed tier is dead for
-  ``crash_duration_s``. The cluster calls :meth:`ServingEngine.crash` on
-  window entry (all device state gone — slots, arena, prefix index) and
-  :meth:`restart` on exit (cold engine, bumped ``engine_generation``);
-  the scheduler reaps the lost residents as typed ``engine_lost``
-  outcomes. ``crash_rotate=False`` pins every crash on pool member 0 —
-  the "one flaky node" pattern circuit breakers exist for.
-* **Partitions** — within each ``partition_period_s`` cycle the
-  edge<->cloud link is down for ``partition_duration_s``: knowledge
-  updates cannot ship (they defer and reconcile via anti-entropy on
-  heal), failover cannot escalate edge->cloud, and the gate's
-  availability mask excludes cloud-dependent arms. Edges keep serving,
-  degraded, with ``stale_epoch`` flags.
+Representation: an **event timeline**. Every fault is a
+:class:`FaultEvent` — ``(t, kind, duration, target, magnitude)`` — and an
+injector is just a sorted list of events consulted by the same five query
+methods the cluster and benches always used:
+
+* **Engine stalls** (``kind="stall"``) — the targeted pool member of a
+  tier is frozen for ``duration``. The scheduler's ``stalled`` hook skips
+  the frozen engine for admission and stepping; its residents stop
+  accruing progress and — with ``request_timeout_s`` set — are timed out,
+  freeing slot and pages.
+* **Engine crashes** (``kind="crash"``) — like stalls but HARD: the
+  member is dead for the window. The cluster calls
+  :meth:`ServingEngine.crash` on window entry (all device state gone —
+  slots, arena, prefix index) and :meth:`restart` on exit (cold engine,
+  bumped ``engine_generation``); the scheduler reaps the lost residents
+  as typed ``engine_lost`` outcomes.
+* **Partitions** (``kind="partition"``) — the edge<->cloud link is down
+  for the window: knowledge updates cannot ship (they defer and reconcile
+  via anti-entropy on heal), failover cannot escalate edge->cloud, and
+  the gate's availability mask excludes cloud-dependent arms. Edges keep
+  serving, degraded, with ``stale_epoch`` flags.
+* **Network delay spikes** (``kind="net_spike"``) — completions finalized
+  in the window pay ``magnitude`` extra seconds of transit delay (a
+  congested uplink).
+* **Dropped completions** (``kind="drop"`` windows and/or a global
+  ``drop_completion_p``) — each harvested completion is lost with the
+  effective probability (seeded RNG, one draw per completion): the caller
+  never sees the result and must treat the request like a shed (retry /
+  fail over), exercising the same recovery path as a lost RPC.
+
+Two injectors share the query API:
+
+* :class:`TimelineFaultInjector` — owns an explicit event list. This is
+  what the DST layer (:mod:`repro.cluster.dst`) drives with *generated*
+  random schedules, and what replay-from-trace rebuilds from JSON.
+* :class:`FaultInjector` — the original periodic-window configuration
+  (:class:`FaultConfig`), now a thin subclass that lazily COMPILES its
+  ``period/duration/start`` formulas into timeline events cycle by cycle.
+  The hand-authored ``chaos_bench.py`` schedules are therefore fixed
+  points of the same representation the fuzzer samples from, and remain
+  behavior-identical (the test suite pins the exact old window/rotation
+  semantics).
 
 The stall/spike injectors never touch engine internals — a "stalled"
 engine's KV and slot state stay intact, which is exactly what makes
@@ -44,14 +59,76 @@ restart + re-serve, not preemption.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Tuple
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+# fault kinds an injector interprets; workload kinds (arrivals, knowledge,
+# slo_shift) ride the same FaultEvent/timeline representation but are
+# applied by the DST harness, not the injector
+FAULT_KINDS = ("stall", "crash", "partition", "net_spike", "drop")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled event on the virtual clock.
+
+    ``t`` is the window start, ``duration`` its length (instantaneous
+    events — e.g. a DST arrival burst — use 0). ``tier``/``engine`` name
+    the target for stall/crash: ``engine == -1`` means "rotating victim",
+    resolved at query time as ``cycle % pool_size`` (the classic
+    FaultConfig rotation); an explicit index pins the victim. ``magnitude``
+    is the extra transit seconds for ``net_spike`` and the drop
+    probability for ``drop`` windows. ``params`` carries workload payloads
+    (request specs, knowledge-burst targets) untouched by the injector."""
+    t: float
+    kind: str
+    duration: float = 0.0
+    tier: str = ""
+    engine: int = -1
+    magnitude: float = 0.0
+    cycle: int = 0
+    params: Optional[dict] = None
+
+    def active(self, now: float) -> bool:
+        return self.t <= now < self.t + self.duration
+
+    def victim(self, pool_size: int) -> int:
+        return (self.engine if self.engine >= 0
+                else self.cycle % max(pool_size, 1))
+
+    def to_dict(self) -> dict:
+        """Compact JSON form (defaults omitted) for trace artifacts."""
+        d: dict = {"t": self.t, "kind": self.kind}
+        if self.duration:
+            d["duration"] = self.duration
+        if self.tier:
+            d["tier"] = self.tier
+        if self.engine != -1:
+            d["engine"] = self.engine
+        if self.magnitude:
+            d["magnitude"] = self.magnitude
+        if self.cycle:
+            d["cycle"] = self.cycle
+        if self.params is not None:
+            d["params"] = self.params
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "FaultEvent":
+        return FaultEvent(
+            t=float(d["t"]), kind=str(d["kind"]),
+            duration=float(d.get("duration", 0.0)),
+            tier=str(d.get("tier", "")), engine=int(d.get("engine", -1)),
+            magnitude=float(d.get("magnitude", 0.0)),
+            cycle=int(d.get("cycle", 0)), params=d.get("params"))
 
 
 @dataclass
 class FaultConfig:
+    """Periodic-window fault schedule (compiled to timeline events)."""
     stall_period_s: float = 0.0       # 0 disables engine stalls
     stall_duration_s: float = 1.0     # frozen window at each cycle start
     stall_start_s: float = 0.0        # no stalls before this instant (lets
@@ -74,90 +151,158 @@ class FaultConfig:
     seed: int = 0
 
 
-class FaultInjector:
-    """Deterministic fault schedule (see module docstring)."""
+class TimelineFaultInjector:
+    """Fault injector over an explicit, sorted event timeline.
 
-    def __init__(self, cfg: FaultConfig = None):
-        self.cfg = FaultConfig() if cfg is None else cfg
-        self._rng = np.random.default_rng(self.cfg.seed)
+    Query methods answer "is this fault active at virtual time ``now``"
+    and bump the same counters the cluster/bench checks have always read.
+    ``drop_completion`` combines a global ``drop_completion_p`` with any
+    active ``drop`` window (max wins) and spends one seeded draw per
+    consultation while the effective probability is > 0 — deterministic
+    given the completion order, which the virtual clock already fixes."""
+
+    def __init__(self, events: Sequence[FaultEvent] = (), *,
+                 drop_completion_p: float = 0.0, seed: int = 0):
+        self._events: Dict[str, List[FaultEvent]] = {}
+        self.drop_completion_p = drop_completion_p
+        self._rng = np.random.default_rng(seed)
         self.stall_hits = 0       # times a stalled engine was consulted
         self.spiked = 0           # completions that got a delay spike
         self.dropped = 0          # completions dropped
         self.crash_hits = 0       # times a crashed engine was consulted
         self.partition_hits = 0   # times a live partition was consulted
+        for ev in events:
+            self.add(ev)
 
+    # ---- timeline maintenance -----------------------------------------
+    def add(self, ev: FaultEvent) -> None:
+        """Insert an event, keeping the per-kind list sorted by start."""
+        lst = self._events.setdefault(ev.kind, [])
+        bisect.insort(lst, ev, key=lambda e: e.t)
+
+    def events(self, kind: Optional[str] = None) -> List[FaultEvent]:
+        """The timeline (one kind, or all kinds merged in time order)."""
+        if kind is not None:
+            return list(self._events.get(kind, []))
+        out = [ev for lst in self._events.values() for ev in lst]
+        out.sort(key=lambda e: (e.t, e.kind))
+        return out
+
+    def horizon(self) -> float:
+        """Latest window end over all events (0 for an empty timeline)."""
+        return max((ev.t + ev.duration for lst in self._events.values()
+                    for ev in lst), default=0.0)
+
+    def _active(self, kind: str, now: float) -> List[FaultEvent]:
+        self._ensure(now)
+        out = []
+        for ev in self._events.get(kind, ()):
+            if ev.t > now:
+                break
+            if ev.active(now):
+                out.append(ev)
+        return out
+
+    def _ensure(self, now: float) -> None:
+        """Hook for lazily-generated timelines (see :class:`FaultInjector`
+        which expands periodic formulas on demand). Base: no-op."""
+
+    # ---- queries (the stable five-method API) --------------------------
     def stalled(self, tier: str, engine_index: int, now: float,
                 pool_size: int = 1) -> bool:
-        """Is this pool member frozen at virtual time ``now``? One victim
-        per cycle, rotating through the pool so every member gets its turn
-        to fail."""
-        c = self.cfg
-        if c.stall_period_s <= 0 or tier not in c.stall_tiers:
-            return False
-        if now < c.stall_start_s:
-            return False
-        cycle, phase = divmod(now - c.stall_start_s, c.stall_period_s)
-        if phase >= c.stall_duration_s:
-            return False
-        hit = int(cycle) % max(pool_size, 1) == engine_index
+        """Is this pool member frozen at virtual time ``now``?"""
+        hit = any(ev.tier == tier and ev.victim(pool_size) == engine_index
+                  for ev in self._active("stall", now))
         if hit:
             self.stall_hits += 1
         return hit
 
     def crashed(self, tier: str, engine_index: int, now: float,
                 pool_size: int = 1) -> bool:
-        """Should this pool member be DEAD at virtual time ``now``? Same
-        windowing as :meth:`stalled`, but the victim is either rotating
-        (``crash_rotate=True``) or pinned to member 0 (the one flaky node
-        that keeps failing — the case circuit breakers pay for)."""
-        c = self.cfg
-        if c.crash_period_s <= 0 or tier not in c.crash_tiers:
-            return False
-        if now < c.crash_start_s:
-            return False
-        cycle, phase = divmod(now - c.crash_start_s, c.crash_period_s)
-        if phase >= c.crash_duration_s:
-            return False
-        victim = (int(cycle) % max(pool_size, 1)) if c.crash_rotate else 0
-        hit = victim == engine_index
+        """Should this pool member be DEAD at virtual time ``now``?"""
+        hit = any(ev.tier == tier and ev.victim(pool_size) == engine_index
+                  for ev in self._active("crash", now))
         if hit:
             self.crash_hits += 1
         return hit
 
     def partitioned(self, now: float) -> bool:
         """Is the edge<->cloud link down at virtual time ``now``?"""
-        c = self.cfg
-        if c.partition_period_s <= 0:
-            return False
-        if now < c.partition_start_s:
-            return False
-        phase = (now - c.partition_start_s) % c.partition_period_s
-        hit = phase < c.partition_duration_s
+        hit = bool(self._active("partition", now))
         if hit:
             self.partition_hits += 1
         return hit
 
     def net_spike(self, now: float) -> float:
-        """Extra network transit delay at virtual time ``now``."""
-        c = self.cfg
-        if c.net_spike_period_s <= 0:
-            return 0.0
-        if now % c.net_spike_period_s < c.net_spike_duration_s:
+        """Extra network transit delay at virtual time ``now`` (max over
+        overlapping spike windows)."""
+        extra = max((ev.magnitude for ev in self._active("net_spike", now)),
+                    default=0.0)
+        if extra > 0:
             self.spiked += 1
-            return c.net_spike_extra_s
+            return extra
         return 0.0
 
     def drop_completion(self, now: float) -> bool:
         """Should this completion be lost in transit? One seeded draw per
-        completion — deterministic given the completion order, which the
-        virtual clock already fixes."""
-        c = self.cfg
-        if c.drop_completion_p <= 0:
+        consultation while the effective drop probability is > 0."""
+        p = self.drop_completion_p
+        for ev in self._active("drop", now):
+            p = max(p, ev.magnitude)
+        if p <= 0:
             return False
-        hit = bool(self._rng.random() < c.drop_completion_p)
+        hit = bool(self._rng.random() < p)
         if hit:
             self.dropped += 1
         return hit
 
 
-__all__ = ["FaultInjector", "FaultConfig"]
+class FaultInjector(TimelineFaultInjector):
+    """Periodic-window fault schedule (see module docstring), expressed on
+    the event timeline: each ``period/duration/start`` formula is expanded
+    lazily — cycle by cycle, up to the largest ``now`` ever queried — into
+    :class:`FaultEvent` windows. Query semantics are identical to the
+    original closed-form implementation (the effective window length is
+    ``min(duration, period)``, exactly the reachable phase range)."""
+
+    def __init__(self, cfg: FaultConfig = None):
+        self.cfg = FaultConfig() if cfg is None else cfg
+        super().__init__(drop_completion_p=self.cfg.drop_completion_p,
+                         seed=self.cfg.seed)
+        self._next_cycle = {k: 0 for k in
+                            ("stall", "crash", "partition", "net_spike")}
+
+    def _ensure(self, now: float) -> None:
+        c = self.cfg
+        self._expand("stall", c.stall_period_s, c.stall_duration_s,
+                     c.stall_start_s, now, tiers=c.stall_tiers, rotate=True)
+        self._expand("crash", c.crash_period_s, c.crash_duration_s,
+                     c.crash_start_s, now, tiers=c.crash_tiers,
+                     rotate=c.crash_rotate)
+        self._expand("partition", c.partition_period_s,
+                     c.partition_duration_s, c.partition_start_s, now)
+        self._expand("net_spike", c.net_spike_period_s,
+                     c.net_spike_duration_s, 0.0, now,
+                     magnitude=c.net_spike_extra_s)
+
+    def _expand(self, kind: str, period: float, duration: float,
+                start: float, now: float, tiers: Tuple[str, ...] = (),
+                rotate: bool = True, magnitude: float = 0.0) -> None:
+        if period <= 0:
+            return
+        k = self._next_cycle[kind]
+        dur = min(duration, period)
+        while start + k * period <= now:
+            t = start + k * period
+            if tiers:
+                for tier in tiers:
+                    self.add(FaultEvent(t, kind, dur, tier=tier,
+                                        engine=-1 if rotate else 0, cycle=k))
+            else:
+                self.add(FaultEvent(t, kind, dur, magnitude=magnitude))
+            k += 1
+        self._next_cycle[kind] = k
+
+
+__all__ = ["FaultInjector", "FaultConfig", "FaultEvent",
+           "TimelineFaultInjector", "FAULT_KINDS"]

@@ -91,6 +91,30 @@ health machinery that keeps the loop serving through them:
   baseline policies ignore the mask — they are the paper's
   non-adaptive comparison points.
 
+**Fault model and deterministic simulation testing.** The full fault
+vocabulary above is represented as explicit event timelines
+(:class:`~repro.cluster.faults.FaultEvent`): every fault is a record
+``(t, kind, duration, victim, magnitude)`` with
+``kind in {"stall", "crash", "partition", "net_spike", "drop"}``, active
+on the half-open virtual-time window ``[t, t + duration)``. The periodic
+``FaultConfig`` formulas used by the hand-authored chaos cases lazily
+expand into the same records, so a hand schedule and a fuzzer schedule
+are the same object — replayable, serializable, shrinkable.
+
+:mod:`repro.cluster.dst` builds FoundationDB-style deterministic
+simulation testing on top: a seeded generator composes overlapping fault
++ workload timelines (arrival bursts, knowledge-update bursts, SLO-mix
+shifts on top of the five fault kinds), a harness drives real engine
+pools + scheduler + knowledge updater through them on one virtual clock,
+and after EVERY pump re-checks the invariant oracles — request
+conservation, generation-fence legality, breaker state-machine legality,
+monotone knowledge epochs with no unflagged ``stale_epoch`` completion,
+page-arena audit (free + cached + active == num_pages; refcount == slot
+mappings; zero leaks at quiescence), and greedy token identity for
+resumed/hedged work. Failures record a JSON trace that replays
+byte-identically and ddmin-shrinks to a minimal event schedule
+(``make fuzz`` / ``benchmarks/dst_bench.py``).
+
 All knobs default off (no shedding, no timeout, no watermark, no faults,
 no breakers, no hedging), which reproduces the pre-overload closed loop
 exactly.

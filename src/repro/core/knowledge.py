@@ -118,5 +118,20 @@ class AdaptiveKnowledgeUpdater:
         """Is this store serving knowledge older than the newest epoch?"""
         return store.epoch < self.latest_epoch
 
+    def snapshot(self, stores: Optional[Dict[str, VectorStore]] = None
+                 ) -> dict:
+        """Machine-readable epoch state for DST oracle snapshots: the
+        monotone ``latest_epoch``, the deferred-edge set (sorted — trace
+        artifacts must not depend on set iteration order), and, when the
+        per-edge stores are passed in, each store's stamped epoch. The
+        DST epoch oracle checks these never regress and that every store
+        epoch stays <= ``latest_epoch``."""
+        snap: dict = {"latest_epoch": self.latest_epoch,
+                      "deferred": sorted(self.deferred)}
+        if stores is not None:
+            snap["stores"] = {eid: stores[eid].epoch
+                              for eid in sorted(stores)}
+        return snap
+
 
 __all__ = ["AdaptiveKnowledgeUpdater", "KnowledgeUpdateConfig", "UpdateStats"]

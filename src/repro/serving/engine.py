@@ -749,6 +749,47 @@ class ServingEngine:
         self.preemptions += 1
         return snap
 
+    def audit(self) -> Dict[str, int]:
+        """Page-accounting audit: cross-check the allocator's free list, LRU
+        pool and refcounts against the resident slots' page mappings (every
+        page exactly one of FREE/CACHED/ACTIVE, populations summing to
+        ``num_pages``, refcount == number of slots mapping the page).
+        This is the DST page-arena oracle, also called at the end of every
+        bench ``--check``. Raises :class:`PagingError` on any breach.
+        Contiguous engines have no allocator and dead engines' device
+        bookkeeping is declared lost until :meth:`restart` — both return a
+        trivial report instead of being checked."""
+        if self._allocator is None or self.dead:
+            return {"num_pages": 0, "free": 0, "cached": 0, "active": 0,
+                    "skipped": 1}
+        mapped: Dict[int, int] = {}
+        for s in self._slots:
+            if s is not None and s.page_ids is not None:
+                for pid in s.page_ids:
+                    pid = int(pid)
+                    mapped[pid] = mapped.get(pid, 0) + 1
+        return self._allocator.audit(mapped)
+
+    def assert_quiescent(self) -> Dict[str, int]:
+        """Audit an engine that should be fully drained: no resident slots,
+        and every page either free or parked in the LRU pool (ACTIVE count
+        zero — anything else is a leaked reference). Raises
+        :class:`EngineError` / :class:`PagingError` on violation; returns
+        the audit report. Dead engines are skipped (restart rebuilds cold)."""
+        if self.dead:
+            return {"num_pages": 0, "free": 0, "cached": 0, "active": 0,
+                    "skipped": 1}
+        if self.has_active:
+            raise EngineError(
+                f"assert_quiescent: {self.active_slots} slot(s) still "
+                f"resident")
+        rep = self.audit()
+        if rep.get("active", 0):
+            raise EngineError(
+                f"assert_quiescent: page leak — {rep['active']} page(s) "
+                f"still referenced with no resident slots")
+        return rep
+
     def invalidate_prefix_cache(self) -> int:
         """Drop every prefix-cache entry (knowledge rotation made cached
         retrieved-context prefixes stale). Bumps the allocator generation

@@ -70,6 +70,27 @@ class CircuitBreaker:
     def consecutive_failures(self) -> int:
         return self._failures
 
+    @property
+    def opened_at(self) -> float:
+        """Clock time of the most recent failure while tripped (the reset
+        window counts from here). Meaningful only after the first trip."""
+        return self._opened_at
+
+    @property
+    def probing(self) -> bool:
+        """Is the single half-open probe slot currently occupied?"""
+        return self._probing
+
+    def snapshot(self, now: float) -> Dict[str, object]:
+        """Machine-readable state for DST oracle snapshots / wedge dumps.
+        Legality checkers use ``state``/``opened_at``: the only admissible
+        transitions are the documented state machine, and an observed
+        ``half_open`` always implies ``now - opened_at >= reset_timeout_s``
+        (up to float epsilon) since the last trip."""
+        return {"state": self.state(now), "failures": self._failures,
+                "probing": self._probing, "opened_at": self._opened_at,
+                "trips": self.trips, "probes": self.probes}
+
     def allow(self, now: float) -> bool:
         """May new work be routed to the guarded resource right now?"""
         s = self.state(now)

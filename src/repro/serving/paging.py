@@ -95,6 +95,72 @@ class PageAllocator:
     def refcount(self, pid: int) -> int:
         return int(self._refs[int(pid)])
 
+    def audit(self, mapped: Optional[Dict[int, int]] = None
+              ) -> Dict[str, int]:
+        """Full page-accounting audit — the DST page oracle, also run by the
+        bench ``--check`` quiescence sweeps.
+
+        Verifies that every physical page is in exactly one of the three
+        states (FREE on the free list, CACHED in the LRU pool, ACTIVE with
+        refcount >= 1) and that the three populations sum to ``num_pages``
+        (zero leaks, zero aliasing). When ``mapped`` is given — ``{page id:
+        number of slot mappings}`` gathered from the engine's resident page
+        tables — additionally verifies that each page's refcount equals its
+        mapping count (a skipped decrement or double ref shows up here).
+        Raises :class:`PagingError` on any breach; returns the population
+        counts ``{"num_pages", "free", "cached", "active"}`` otherwise."""
+        free_list = [int(p) for p in self._free]
+        free = set(free_list)
+        if len(free) != len(free_list):
+            dup = sorted(p for p in free if free_list.count(p) > 1)
+            raise PagingError(f"free list contains duplicates: {dup}")
+        if free != self._free_set:
+            raise PagingError(
+                f"free list/set disagree: list {sorted(free)} vs "
+                f"set {sorted(self._free_set)}")
+        cached = {int(p) for p in self._lru}
+        for name, grp in (("free list", free), ("LRU pool", cached)):
+            if TRASH_PAGE in grp:
+                raise PagingError(f"trash page 0 found in the {name}")
+            bad = sorted(p for p in grp if not 1 <= p <= self.num_pages)
+            if bad:
+                raise PagingError(f"foreign page ids in the {name}: {bad}")
+        both = free & cached
+        if both:
+            raise PagingError(
+                f"pages simultaneously free and cached: {sorted(both)}")
+        neg = [p for p in range(1, self.num_pages + 1) if self._refs[p] < 0]
+        if neg:
+            raise PagingError(f"negative refcounts on pages {neg}")
+        active = {p for p in range(1, self.num_pages + 1)
+                  if self._refs[p] > 0}
+        ghost = (free | cached) & active
+        if ghost:
+            raise PagingError(
+                f"pages on the free list/LRU pool with refcount > 0: "
+                f"{sorted(ghost)}")
+        if len(free) + len(cached) + len(active) != self.num_pages:
+            lost = sorted(set(range(1, self.num_pages + 1))
+                          - free - cached - active)
+            raise PagingError(
+                f"page leak: free {len(free)} + cached {len(cached)} + "
+                f"active {len(active)} != num_pages {self.num_pages}; "
+                f"unaccounted pages {lost}")
+        if mapped is not None:
+            bad = sorted(p for p in mapped
+                         if not 1 <= int(p) <= self.num_pages)
+            if bad:
+                raise PagingError(f"slots map foreign page ids: {bad}")
+            for p in range(1, self.num_pages + 1):
+                want = int(mapped.get(p, 0))
+                have = int(self._refs[p])
+                if want != have:
+                    raise PagingError(
+                        f"refcount mismatch on page {p}: refcount {have} "
+                        f"but {want} resident slot mapping(s)")
+        return {"num_pages": self.num_pages, "free": len(free),
+                "cached": len(cached), "active": len(active)}
+
     def bump_generation(self) -> None:
         """Force plan-memo invalidation without a page state change (e.g.
         the prefix index was cleared, so cached admission matches are

@@ -101,6 +101,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import json
 import time
 from dataclasses import dataclass, field
 from typing import (
@@ -456,29 +457,84 @@ class TierScheduler:
                     f"preemption)\n{self.debug_state()}")
         return out
 
-    def debug_state(self, now: Optional[float] = None) -> str:
-        """Multi-line diagnostic snapshot for wedge reports: per-tier
-        queue depths and head deadline, per-engine residents / free
-        capacity / liveness / generation / breaker state, and the full
-        counter map. Pure introspection — never mutates anything."""
+    def debug_state_dict(self, now: Optional[float] = None) -> dict:
+        """Machine-readable diagnostic snapshot — the same information
+        :meth:`debug_state` renders for humans, as a JSON-serializable
+        dict, so wedge dumps and DST trace artifacts share one format.
+        Per-tier queue depth and head deadline, per-engine residents /
+        free slots / liveness / generation / breaker snapshot, and the
+        full counter map. Pure introspection — never mutates anything
+        (breaker state promotion open -> half_open on read is the
+        breaker's own documented clock behavior)."""
         now = self.clock() if now is None else now
-        lines = []
+        tiers = {}
         for tier, pool in self.pools.items():
             q = self._queues[tier]
-            head = f"{q[0].deadline:.3f}" if q else "-"
-            lines.append(f"tier {tier!r}: queued={len(q)} "
-                         f"head_deadline={head}")
+            engines = []
             for i, e in enumerate(pool):
                 res = sum(1 for k in self._inflight
                           if k[0] == tier and k[1] == i)
                 b = self.breakers.get((tier, i))
-                bs = b.state(now) if b is not None else "none"
+                engines.append({
+                    "residents": res, "free_slots": e.free_slots,
+                    "dead": bool(e.dead),
+                    "generation": e.engine_generation,
+                    "breaker": b.snapshot(now) if b is not None else None,
+                })
+            tiers[tier] = {
+                "queued": len(q),
+                "head_deadline": q[0].deadline if q else None,
+                "engines": engines,
+            }
+        return {"t": now, "tiers": tiers, "counters": dict(self.counters),
+                "conservation_ok": self.conservation_ok(),
+                "fences": self.resident_fences()}
+
+    def debug_state(self, now: Optional[float] = None) -> str:
+        """Multi-line diagnostic snapshot for wedge reports, rendered from
+        :meth:`debug_state_dict` with the raw JSON appended on the last
+        line (grep for ``json=``) so a pasted wedge dump is also machine
+        readable."""
+        now = self.clock() if now is None else now
+        d = self.debug_state_dict(now)
+        lines = []
+        for tier, td in d["tiers"].items():
+            head = ("-" if td["head_deadline"] is None
+                    else f"{td['head_deadline']:.3f}")
+            lines.append(f"tier {tier!r}: queued={td['queued']} "
+                         f"head_deadline={head}")
+            for i, ed in enumerate(td["engines"]):
+                bs = (ed["breaker"]["state"] if ed["breaker"] is not None
+                      else "none")
                 lines.append(
-                    f"  engine[{i}]: residents={res} "
-                    f"free_slots={e.free_slots} dead={e.dead} "
-                    f"generation={e.engine_generation} breaker={bs}")
+                    f"  engine[{i}]: residents={ed['residents']} "
+                    f"free_slots={ed['free_slots']} dead={ed['dead']} "
+                    f"generation={ed['generation']} breaker={bs}")
         lines.append(f"counters={self.counters}")
+        lines.append(f"json={json.dumps(d, sort_keys=True)}")
         return "\n".join(lines)
+
+    def resident_fences(self) -> List[dict]:
+        """Raw material for the DST generation-fence oracle: one record
+        per resident ``(tier, engine index, admit-time generation,
+        engine's current generation, dead flag)``. A legal scheduler
+        never holds a resident whose engine is dead or whose generation
+        moved past the admit fence — :meth:`pump` reaps those before
+        anything else runs."""
+        out: List[dict] = []
+        for (tier, i, rid), it in self._inflight.items():
+            e = self.pools[tier][i]
+            out.append({"tier": tier, "engine": i, "req_id": rid,
+                        "admit_gen": it.admit_gen,
+                        "engine_gen": e.engine_generation,
+                        "dead": bool(e.dead)})
+        return out
+
+    def fences_ok(self) -> bool:
+        """Generation-fence legality: no resident maps to a dead engine or
+        to a generation other than the one it was admitted under."""
+        return all(not f["dead"] and f["admit_gen"] == f["engine_gen"]
+                   for f in self.resident_fences())
 
     # ------------------------------------------------------------------
     # Internals

@@ -1,11 +1,15 @@
 """Direct unit tests for the deterministic fault injector: stall-window
-rotation, net-spike windows, seeded completion-drop determinism, and the
-hard-failure schedules (crashes, partitions) added for crash tolerance.
-Pure functions of virtual time — no engines, no JAX."""
+rotation, net-spike windows, seeded completion-drop determinism, the
+hard-failure schedules (crashes, partitions) added for crash tolerance,
+and the event-timeline representation underneath them (explicit
+FaultEvent records; periodic FaultConfig formulas lazily expand onto the
+same timeline). Pure functions of virtual time — no engines, no JAX."""
 import numpy as np
 import pytest
 
-from repro.cluster.faults import FaultConfig, FaultInjector
+from repro.cluster.faults import (
+    FaultConfig, FaultEvent, FaultInjector, TimelineFaultInjector,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -118,3 +122,119 @@ def test_drop_determinism_under_seed():
     assert draws_a != draws_c
     assert abs(np.mean(draws_a) - 0.3) < 0.08
     assert a.dropped == sum(draws_a)
+
+
+# ---------------------------------------------------------------------------
+# Event timelines (the representation under both injectors)
+# ---------------------------------------------------------------------------
+
+def test_timeline_explicit_engine_events():
+    """Explicit FaultEvent records with pinned victims: windows are
+    half-open [t, t+duration), overlap freely, and never rotate."""
+    tl = TimelineFaultInjector([
+        FaultEvent(1.0, "stall", 2.0, tier="edge", engine=1),
+        FaultEvent(2.0, "crash", 1.5, tier="edge", engine=0),
+        FaultEvent(2.5, "partition", 1.0),
+    ])
+    assert not tl.stalled("edge", 1, 0.9, pool_size=2)
+    assert tl.stalled("edge", 1, 1.0, pool_size=2)      # window start incl.
+    assert not tl.stalled("edge", 0, 1.5, pool_size=2)  # pinned victim
+    assert not tl.stalled("edge", 1, 3.0, pool_size=2)  # window end excl.
+    # crash + stall overlap on different members of the same tier
+    assert tl.crashed("edge", 0, 2.5, pool_size=2)
+    assert tl.stalled("edge", 1, 2.5, pool_size=2)
+    assert tl.partitioned(2.5)
+    assert not tl.partitioned(3.5)
+    assert tl.horizon() == pytest.approx(3.5)
+    assert [e.kind for e in tl.events()] == ["stall", "crash", "partition"]
+
+
+def test_timeline_rotating_victim_resolution():
+    """engine=-1 defers victim choice to query time: cycle % pool_size —
+    the same schedule retargets correctly for any pool width."""
+    ev0 = FaultEvent(0.0, "crash", 1.0, tier="edge", engine=-1, cycle=0)
+    ev3 = FaultEvent(9.0, "crash", 1.0, tier="edge", engine=-1, cycle=3)
+    tl = TimelineFaultInjector([ev0, ev3])
+    assert tl.crashed("edge", 0, 0.5, pool_size=2)
+    assert not tl.crashed("edge", 1, 0.5, pool_size=2)
+    assert tl.crashed("edge", 1, 9.5, pool_size=2)   # 3 % 2 == 1
+    assert tl.crashed("edge", 0, 9.5, pool_size=3)   # 3 % 3 == 0
+
+
+def test_timeline_drop_windows():
+    """A drop window's magnitude is the drop probability; magnitude 1.0
+    loses every completion inside the window and none outside."""
+    tl = TimelineFaultInjector([FaultEvent(5.0, "drop", 2.0, magnitude=1.0)])
+    assert not tl.drop_completion(4.9)       # outside: p==0, no draw
+    assert tl.drop_completion(5.5)
+    assert tl.drop_completion(6.9)
+    assert not tl.drop_completion(7.0)
+    assert tl.dropped == 2
+
+
+def test_fault_event_dict_round_trip():
+    """to_dict omits defaults (compact traces) and from_dict restores the
+    exact event."""
+    full = FaultEvent(3.5, "net_spike", 1.25, tier="cloud", engine=2,
+                      magnitude=0.7, cycle=4, params={"edge": 1})
+    assert FaultEvent.from_dict(full.to_dict()) == full
+    bare = FaultEvent(1.0, "partition")
+    assert bare.to_dict() == {"t": 1.0, "kind": "partition"}
+    assert FaultEvent.from_dict(bare.to_dict()) == bare
+
+
+def _closed_form(kind, cfg, tier, i, t, pool_size):
+    """The original (pre-timeline) periodic-window formulas, kept here as
+    the reference the lazy expansion must match exactly."""
+    if kind == "stall":
+        period, dur, start, tiers, rotate = (
+            cfg.stall_period_s, cfg.stall_duration_s, cfg.stall_start_s,
+            cfg.stall_tiers, True)
+    else:
+        period, dur, start, tiers, rotate = (
+            cfg.crash_period_s, cfg.crash_duration_s, cfg.crash_start_s,
+            cfg.crash_tiers, cfg.crash_rotate)
+    if period <= 0 or t < start or tier not in tiers:
+        return False
+    phase = (t - start) % period
+    cycle = int((t - start) // period)
+    victim = cycle % pool_size if rotate else 0
+    return phase < min(dur, period) and i == victim
+
+
+@pytest.mark.parametrize("rotate", [True, False])
+def test_lazy_expansion_matches_closed_form(rotate):
+    """The timeline compilation of FaultConfig must agree with the original
+    closed-form window arithmetic on a dense time grid — including
+    duration > period (clamped to the reachable phase range) and
+    out-of-order queries (expansion is monotone in max queried time)."""
+    cfg = FaultConfig(stall_period_s=3.0, stall_duration_s=1.2,
+                      stall_start_s=2.0, stall_tiers=("edge", "cloud"),
+                      crash_period_s=2.5, crash_duration_s=4.0,  # > period
+                      crash_start_s=1.0, crash_tiers=("edge",),
+                      crash_rotate=rotate,
+                      partition_period_s=7.0, partition_duration_s=2.0,
+                      partition_start_s=3.0,
+                      net_spike_period_s=4.0, net_spike_duration_s=1.0,
+                      net_spike_extra_s=0.6)
+    fi = FaultInjector(cfg)
+    grid = [round(0.25 * k, 2) for k in range(100)]       # t in [0, 25)
+    # a far-future probe first: expansion must not skip earlier cycles
+    assert fi.partitioned(24.5) == _partition_ref(cfg, 24.5)
+    for t in grid:
+        for tier in ("edge", "cloud"):
+            for i in range(3):
+                assert fi.stalled(tier, i, t, pool_size=3) == \
+                    _closed_form("stall", cfg, tier, i, t, 3), (tier, i, t)
+                assert fi.crashed(tier, i, t, pool_size=3) == \
+                    _closed_form("crash", cfg, tier, i, t, 3), (tier, i, t)
+        assert fi.partitioned(t) == _partition_ref(cfg, t), t
+        want = 0.6 if (t % 4.0) < 1.0 else 0.0
+        assert fi.net_spike(t) == pytest.approx(want), t
+
+
+def _partition_ref(cfg, t):
+    if cfg.partition_period_s <= 0 or t < cfg.partition_start_s:
+        return False
+    phase = (t - cfg.partition_start_s) % cfg.partition_period_s
+    return phase < min(cfg.partition_duration_s, cfg.partition_period_s)

@@ -1,0 +1,140 @@
+"""Circuit-breaker edge cases around the half-open probe protocol — the
+transitions the DST breaker-legality oracle enforces. Pure virtual-time
+state machine, no engines, no JAX."""
+import pytest
+
+from repro.serving.health import CLOSED, HALF_OPEN, OPEN, CircuitBreaker
+
+
+def tripped(threshold=2, reset=5.0, at=0.0):
+    b = CircuitBreaker(threshold=threshold, reset_timeout_s=reset)
+    for _ in range(threshold):
+        b.record_failure(at)
+    assert b.state(at) == OPEN
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Half-open probe loss re-opens with a full backoff window
+# ---------------------------------------------------------------------------
+
+def test_probe_loss_reopens_with_backoff():
+    """A failed half-open probe restarts the reset window from the failure
+    time: the breaker must stay open for a FULL reset_timeout_s again, not
+    re-enter half-open early on the stale opened_at."""
+    b = tripped(reset=5.0, at=0.0)
+    assert b.state(5.0) == HALF_OPEN
+    b.begin_probe(5.0)
+    b.record_failure(6.0)            # probe's work was lost
+    assert b.state(6.0) == OPEN
+    assert b.opened_at == 6.0        # window counts from the new failure
+    assert b.state(10.9) == OPEN     # 6.0 + 5.0 not yet elapsed
+    assert b.state(11.0) == HALF_OPEN
+    assert b.trips == 2              # the re-open is a counted trip
+
+
+def test_repeated_probe_losses_each_restart_the_window():
+    b = tripped(reset=2.0, at=0.0)
+    t = 0.0
+    for _ in range(3):
+        t += 2.0
+        assert b.state(t) == HALF_OPEN
+        b.begin_probe(t)
+        b.record_failure(t + 0.5)
+        t += 0.5
+        assert b.state(t) == OPEN
+        assert b.opened_at == t
+    assert b.trips == 4 and b.probes == 3
+
+
+# ---------------------------------------------------------------------------
+# Concurrent probe exclusion
+# ---------------------------------------------------------------------------
+
+def test_single_probe_slot_excludes_concurrent_probes():
+    """Exactly one in-flight probe: once a caller commits via begin_probe,
+    allow() must refuse a second admission until the probe resolves."""
+    b = tripped(reset=1.0, at=0.0)
+    assert b.allow(1.0)              # half-open, slot free
+    assert b.allow(1.0)              # allow alone never consumes the slot
+    assert not b.probing
+    b.begin_probe(1.0)
+    assert b.probing and b.probes == 1
+    assert not b.allow(1.0)          # slot occupied: no concurrent probe
+    assert not b.allow(1.5)
+    b.begin_probe(1.5)               # double-commit is a no-op
+    assert b.probes == 1
+    b.record_success(2.0)
+    assert b.state(2.0) == CLOSED and not b.probing
+    assert b.allow(2.0)
+
+
+def test_probe_slot_freed_by_failure():
+    b = tripped(reset=1.0, at=0.0)
+    b.begin_probe(1.0)
+    b.record_failure(1.2)
+    assert not b.probing             # failure releases the slot...
+    assert not b.allow(1.3)          # ...but the breaker is open again
+    assert b.state(2.2) == HALF_OPEN
+    assert b.allow(2.2)              # next probe window admits again
+
+
+# ---------------------------------------------------------------------------
+# Crash-during-half-open legality
+# ---------------------------------------------------------------------------
+
+def test_crash_during_half_open_reopens_legally():
+    """An engine crash while its breaker is half-open (probe in flight or
+    not) lands as record_failure: the only legal successor states are
+    open (failure) or closed (success) — exactly what the DST oracle
+    checks via snapshot()."""
+    b = tripped(reset=3.0, at=0.0)
+    assert b.state(3.0) == HALF_OPEN
+    snap = b.snapshot(3.0)
+    assert snap["state"] == HALF_OPEN and not snap["probing"]
+    # crash reaps the pool member before any probe was committed
+    b.record_failure(3.4)
+    snap = b.snapshot(3.4)
+    assert snap["state"] == OPEN and snap["opened_at"] == 3.4
+    # half_open may only be observed after a FULL window from opened_at
+    assert b.state(3.4 + 3.0 - 0.01) == OPEN
+    assert b.state(3.4 + 3.0) == HALF_OPEN
+
+
+def test_success_from_open_is_legal_inflight_pretrip_work():
+    """Work admitted before the trip may complete while the breaker is
+    open; its success legally closes the breaker early."""
+    b = tripped(reset=5.0, at=0.0)
+    b.record_success(1.0)
+    assert b.state(1.0) == CLOSED
+    assert b.consecutive_failures == 0
+
+
+# ---------------------------------------------------------------------------
+# Snapshot semantics
+# ---------------------------------------------------------------------------
+
+def test_snapshot_tracks_state_machine():
+    b = CircuitBreaker(threshold=1, reset_timeout_s=2.0)
+    assert b.snapshot(0.0) == {"state": CLOSED, "failures": 0,
+                               "probing": False, "opened_at": 0.0,
+                               "trips": 0, "probes": 0}
+    b.record_failure(1.0)
+    s = b.snapshot(1.0)
+    assert s["state"] == OPEN and s["trips"] == 1 and s["opened_at"] == 1.0
+    s = b.snapshot(3.0)
+    assert s["state"] == HALF_OPEN
+    b.begin_probe(3.0)
+    s = b.snapshot(3.0)
+    assert s["probing"] and s["probes"] == 1
+    b.record_success(3.5)
+    s = b.snapshot(3.5)
+    assert s == {"state": CLOSED, "failures": 0, "probing": False,
+                 "opened_at": 1.0, "trips": 1, "probes": 1}
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        CircuitBreaker(threshold=0)
+    with pytest.raises(ValueError):
+        CircuitBreaker(reset_timeout_s=0.0)
