@@ -1,6 +1,7 @@
 """Overload benchmark: SLO-aware preemption / shedding under 1x-5x load.
 
-A single paged edge engine (reduced qwen2-0.5b) runs on a virtual clock
+A single paged edge engine (reduced qwen2-0.5b, fused chunked-prefill +
+decode ON: ``STEP_TOKEN_BUDGET`` tokens/step) runs on a virtual clock
 with PAPER_EDGE modeled service times — the same deterministic timeline the
 cluster simulator uses — while a deterministic arrival process offers a
 mixed stream at a chosen multiple of the engine's token capacity:
@@ -50,6 +51,8 @@ from repro.serving import Request, TierScheduler, make_edge_engine
 
 MAX_SEQ = 128
 MAX_BATCH = 4
+STEP_TOKEN_BUDGET = 16      # fused step: decode rows + chunked prefill
+PREFILL_CHUNK = 16
 INTERACTIVE_SLO_S = 2.0     # deadline slack for interactive arrivals
 BATCH_SLO_S = 60.0          # loose deadline for batch arrivals
 WEDGE_IDLE_S = 30.0         # virtual idle time with zero progress = wedge
@@ -163,7 +166,9 @@ def run_case(eng, specs, load: float, *, preempt: bool, faults=None,
 def run(quick: bool = False, check: bool = False, seed: int = 0):
     n = 36 if quick else 120
     specs = overload_workload(n, seed)
-    eng = make_edge_engine(max_seq=MAX_SEQ, max_batch=MAX_BATCH, seed=0)
+    eng = make_edge_engine(max_seq=MAX_SEQ, max_batch=MAX_BATCH, seed=0,
+                           step_token_budget=STEP_TOKEN_BUDGET,
+                           prefill_chunk=PREFILL_CHUNK)
     eng.warmup(len(eng.tok.encode(p)) for _, p, _ in specs)
 
     # uncontended greedy reference — the token-identity yardstick

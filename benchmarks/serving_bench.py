@@ -1,6 +1,6 @@
 """Serving benchmarks on a heavy-tailed mixed-length stream.
 
-Three comparisons (reduced qwen2-0.5b, byte tokenizer):
+Four comparisons (reduced qwen2-0.5b, byte tokenizer):
 
 1. static vs continuous batching (PR 1): rigid ``max_batch`` batches with
    head-of-line blocking vs a TierScheduler streaming the slot pool.
@@ -10,7 +10,7 @@ Three comparisons (reduced qwen2-0.5b, byte tokenizer):
    requests are bounded by actual token demand instead of worst-case lanes.
    Reports tokens/s (target: within 5%), peak resident requests (target:
    >=2x at equal cache memory), KV bytes, and decode re-traces (must be 0).
-3. prefix-cached vs plain paged (this PR): the EACO-RAG edge scenario — N
+3. prefix-cached vs plain paged (PR 3): the EACO-RAG edge scenario — N
    requests grounded in the SAME retrieved context, sharing a long prompt
    prefix at 0% / 50% / 90% share fractions. The prefix cache maps shared
    pages + CoW tail and prefills only the unique suffix, so aggregate
@@ -20,6 +20,18 @@ Three comparisons (reduced qwen2-0.5b, byte tokenizer):
    same arena. Targets at 90% share: >=2x prefill throughput, more peak
    residents, token-identical greedy output, zero decode retraces, prefill
    traces bounded by the power-of-two bucket count.
+4. fused chunked-prefill + decode (this PR): a mixed 70/30
+   interactive/batch arrival stream on the virtual clock (PAPER_EDGE
+   modeled service times, exactly the cluster simulator's pricing), whole-
+   suffix admission vs the token-budget fused step at several budgets.
+   Batch prompts are long (prefill-heavy), interactive prompts short:
+   whole-suffix admission charges every co-admitted prompt's FULL prefill
+   to the round the interactive request's first token lands in, while the
+   fused step admits host-only and steers the chunk budget interactive-
+   first, so interactive TTFT collapses to ~one mixed step. Targets at
+   full size: interactive p95 TTFT >=1.5x better than whole-suffix,
+   aggregate decode tokens/s within 10%, greedy token-identical output,
+   zero decode/fused retraces after warmup.
 
 All paths share warmed-up fixed-shape jitted functions, so the measured
 deltas are pure scheduling / memory layout / prefill compute.
@@ -29,6 +41,7 @@ Usage:  PYTHONPATH=src:. python benchmarks/serving_bench.py [--smoke] [--check]
 from __future__ import annotations
 
 import argparse
+import bisect
 import sys
 import time
 
@@ -134,6 +147,8 @@ def run(quick: bool = False, n_requests: int = 64, max_batch: int = 8,
     rows += run_prefix_scenarios(n_requests=n_requests,
                                  max_batch=max_batch, max_seq=max_seq,
                                  seed=seed, quick=quick)
+    rows += run_fused_scenarios(n_requests=n_requests, max_seq=max_seq,
+                                seed=seed, quick=quick)
     emit(rows, "serving_bench")
     if check:
         # tiny smoke runs are noisy: only the full-size bench gates on perf
@@ -148,6 +163,7 @@ def run(quick: bool = False, n_requests: int = 64, max_batch: int = 8,
               f"retraces, token counts match, page arenas quiescent")
         _check_paged(rows, quick)
         _check_prefix(rows, quick)
+        _check_fused(rows, quick)
     return rows
 
 
@@ -273,6 +289,214 @@ def run_prefix_scenarios(*, n_requests: int, max_batch: int, max_seq: int,
             "hit_rate": on["prefix_hit_rate"],
         })
     return rows
+
+
+def fused_workload(n: int, seed: int, max_seq: int):
+    """~70/30 interactive/batch arrival stream. Interactive prompts are
+    short with few new tokens (TTFT is what matters); batch prompts are
+    long (prefill-heavy — the EACO-RAG retrieved-context shape) with more
+    decode work. Most batch arrivals carry an interactive request in the
+    same burst (zero gap), which is what makes whole-suffix admission
+    co-admit the batch prompt's full prefill into the interactive
+    request's first round. Prompts are unique (no prefix sharing) so both
+    engine modes do identical prefill work."""
+    rng = np.random.default_rng(seed)
+    letters = list("abcdefgh ")
+    b_lo = int(max_seq * 0.60)
+    b_hi = min(int(max_seq * 0.85), max_seq - 30)
+
+    def spec(slo, plen, new, k):
+        prompt = f"{slo[0]}{k} " + "".join(
+            rng.choice(letters, max(plen - 5, 1)))
+        return (slo, prompt, new)
+
+    specs, arrivals = [], []
+    t = 0.0
+    while len(specs) < n:
+        if rng.random() < 0.3:
+            t += float(rng.exponential(0.10))
+            specs.append(spec("batch", int(rng.integers(b_lo, b_hi)),
+                              int(rng.integers(16, 25)), len(specs)))
+            arrivals.append(t)
+            if len(specs) < n and rng.random() < 0.8:
+                # an interactive request rides the same burst
+                specs.append(spec("interactive", int(rng.integers(8, 28)),
+                                  8, len(specs)))
+                arrivals.append(t)
+        else:
+            t += float(rng.exponential(0.045))
+            specs.append(spec("interactive", int(rng.integers(8, 28)),
+                              8, len(specs)))
+            arrivals.append(t)
+    return specs, arrivals
+
+
+def run_fused_scenarios(*, n_requests: int, max_seq: int, seed: int,
+                        quick: bool):
+    """Whole-suffix admission vs the fused token-budget step on the SAME
+    arrival stream, each arm on its own virtual clock with PAPER_EDGE
+    modeled service times (the cluster simulator's pricing): per pump,
+    the clock advances by ``modeled_prefill_s(Δprefill_tokens) + Δrounds *
+    modeled_decode_round_s``. TTFT comes from ``Completion.ttft_s``
+    (scheduler clock), snapped to the end of the round that computed the
+    first token (engine timestamps are round STARTS — the clock only
+    advances after the pump that did the work)."""
+    from repro.core.clock import VirtualClock
+    from repro.core.cost_model import (
+        PAPER_EDGE, modeled_decode_round_s, modeled_prefill_s,
+    )
+
+    n = max(12, (2 * n_requests) // 3)
+    max_batch = 8
+    chunk = 16 if quick else 64
+    budgets = [16] if quick else [32, 64]
+    specs, arrivals = fused_workload(n, seed, max_seq)
+
+    def drive(budget):
+        clock = VirtualClock()
+        kw = {} if budget is None else dict(step_token_budget=budget,
+                                            prefill_chunk=chunk)
+        eng = make_edge_engine(max_seq=max_seq, max_batch=max_batch,
+                               seed=0, clock=clock, **kw)
+        eng.warmup(len(eng.tok.encode(p)) for _, p, _ in specs)
+        traces0 = dict(eng.trace_counts)
+        d0 = eng.decode_rounds
+        reqs = [Request(p, max_new_tokens=new, slo=slo)
+                for slo, p, new in specs]
+        sched = TierScheduler({"edge": eng}, clock=clock)
+        pend = list(zip(arrivals, reqs))
+        sub_t, comps, bounds = {}, {}, []
+        idle_since = None
+        while pend or sched.pending() or sched.in_flight():
+            now = clock.now()
+            while pend and pend[0][0] <= now + 1e-12:
+                _, r = pend.pop(0)
+                sub_t[id(r)] = now
+                sched.submit(r, "edge", now=now)
+            pp, dd = eng.prefill_tokens, eng.decode_rounds
+            for c in sched.pump(now=now):
+                comps[id(c.request)] = c
+            dt = (modeled_prefill_s(PAPER_EDGE, eng.prefill_tokens - pp)
+                  + (eng.decode_rounds - dd)
+                  * modeled_decode_round_s(PAPER_EDGE))
+            if dt > 0:
+                clock.advance(dt)
+                bounds.append(clock.now())
+                idle_since = None
+                continue
+            idle_since = now if idle_since is None else idle_since
+            if now - idle_since > 30.0:
+                raise RuntimeError(
+                    f"fused scenario wedged at t={now:.2f}: "
+                    f"{sched.pending()} queued, {sched.in_flight()} resident")
+            clock.advance(max(pend[0][0] - now, 1e-3) if pend else 1e-3)
+        eng.assert_quiescent()
+
+        ttft = {}
+        for r in reqs:
+            tau = sub_t[id(r)] + comps[id(r)].ttft_s
+            j = bisect.bisect_right(bounds, tau + 1e-9)
+            end = bounds[j] if j < len(bounds) else bounds[-1]
+            ttft[id(r)] = end - sub_t[id(r)]
+
+        def p95(xs):
+            return float(np.percentile(xs, 95)) if xs else 0.0
+
+        inter = [ttft[id(r)] for r in reqs if r.slo == "interactive"]
+        batch = [ttft[id(r)] for r in reqs if r.slo == "batch"]
+        new_tokens = sum(c.new_tokens for c in comps.values())
+        rounds = eng.decode_rounds - d0
+        return {
+            "texts": [comps[id(r)].text for r in reqs],
+            "interactive_p95_ttft_s": p95(inter),
+            "batch_p95_ttft_s": p95(batch),
+            "decode_tokens_per_s":
+                new_tokens / max(rounds * modeled_decode_round_s(PAPER_EDGE),
+                                 1e-9),
+            "new_tokens": new_tokens,
+            "makespan_s": clock.now(),
+            "decode_retraces": eng.trace_counts["decode"] - traces0["decode"],
+            "fused_retraces": eng.trace_counts["fused"] - traces0["fused"],
+            "mixed_steps": eng.mixed_steps,
+            "prefill_chunks": eng.prefill_chunks,
+            "budget_utilization": eng.budget_utilization,
+            "preempted": sched.counters["preempted"],
+        }
+
+    arms = [("whole-suffix", None)] + [(f"budget-{b}", b) for b in budgets]
+    res = {}
+    rows = []
+    for name, budget in arms:
+        r = drive(budget)
+        res[name] = r
+        rows.append({
+            "name": f"fused-{name}",
+            "requests": n,
+            "interactive_p95_ttft_ms":
+                round(r["interactive_p95_ttft_s"] * 1e3, 1),
+            "batch_p95_ttft_ms": round(r["batch_p95_ttft_s"] * 1e3, 1),
+            "decode_tokens_per_s": round(r["decode_tokens_per_s"], 1),
+            "new_tokens": r["new_tokens"],
+            "makespan_virtual_s": round(r["makespan_s"], 2),
+            "decode_retraces": r["decode_retraces"],
+            "fused_retraces": r["fused_retraces"],
+            "mixed_steps": r["mixed_steps"],
+            "prefill_chunks": r["prefill_chunks"],
+            "budget_utilization": round(r["budget_utilization"], 3),
+            "preempted": r["preempted"],
+        })
+    whole = res["whole-suffix"]
+    gate = res[f"budget-{budgets[-1]}"]
+    rows.append({
+        "name": "fused-summary",
+        "gate_budget": budgets[-1],
+        "ttft_p95_improvement": round(
+            whole["interactive_p95_ttft_s"]
+            / max(gate["interactive_p95_ttft_s"], 1e-9), 2),
+        "decode_tokens_per_s_ratio": round(
+            gate["decode_tokens_per_s"]
+            / max(whole["decode_tokens_per_s"], 1e-9), 3),
+        "tokens_identical": all(res[f"budget-{b}"]["texts"] == whole["texts"]
+                                for b in budgets),
+    })
+    return rows
+
+
+def _check_fused(rows, quick: bool):
+    """Acceptance gates for the fused chunked-prefill scenario. Identity
+    and retrace gates always run; the TTFT/throughput gates only at full
+    size (tiny smoke streams are burst-dominated noise)."""
+    s = next(r for r in rows if r["name"] == "fused-summary")
+    arms = [r for r in rows if r["name"].startswith("fused-")
+            and r["name"] != "fused-summary"]
+    ok = True
+    msgs = []
+    if not s["tokens_identical"]:
+        ok = False
+        msgs.append("fused outputs differ from whole-suffix admission")
+    for r in arms:
+        if r["decode_retraces"] or r["fused_retraces"]:
+            ok = False
+            msgs.append(f"{r['name']}: retraced after warmup "
+                        f"(decode {r['decode_retraces']}, "
+                        f"fused {r['fused_retraces']})")
+    if not quick:
+        if s["ttft_p95_improvement"] < 1.5:
+            ok = False
+            msgs.append(f"interactive p95 TTFT improvement "
+                        f"{s['ttft_p95_improvement']} < 1.5")
+        if s["decode_tokens_per_s_ratio"] < 0.9:
+            ok = False
+            msgs.append(f"decode tokens/s ratio "
+                        f"{s['decode_tokens_per_s_ratio']} < 0.9")
+    if not ok:
+        print("FUSED CHECK FAILED: " + "; ".join(msgs))
+        sys.exit(1)
+    print(f"FUSED CHECK OK: interactive p95 TTFT "
+          f"{s['ttft_p95_improvement']}x better at budget "
+          f"{s['gate_budget']}, decode tokens/s ratio "
+          f"{s['decode_tokens_per_s_ratio']}, token-identical, zero "
+          f"decode/fused retraces")
 
 
 def _check_prefix(rows, quick: bool):

@@ -94,6 +94,12 @@ class DSTConfig:
     page_size: int = 16
     num_pages: int = 12               # < max_batch*pages_per_slot: page
     #                                   pressure so CoW/LRU paths execute
+    # fused chunked-prefill + decode on by default: DST universes exercise
+    # preempt/crash/requeue of HALF-PREFILLED residents, and the identity
+    # oracle compares chunked pool output against the whole-suffix
+    # ref_engine (None = whole-suffix pools, the pre-chunking behavior)
+    step_token_budget: Optional[int] = 24
+    prefill_chunk: int = 16
     store_capacity: int = 40
     # ---- scheduler knobs ------------------------------------------------
     breaker_threshold: int = 2
@@ -254,7 +260,9 @@ class DSTHarness:
         c = self.cfg
         ekw = dict(max_seq=c.max_seq, max_batch=c.max_batch, seed=0,
                    kv_layout="paged", page_size=c.page_size,
-                   num_pages=c.num_pages, prefix_cache=True)
+                   num_pages=c.num_pages, prefix_cache=True,
+                   step_token_budget=c.step_token_budget,
+                   prefill_chunk=c.prefill_chunk)
         if pools is not None:
             self.pools = pools
         else:

@@ -226,6 +226,11 @@ class SimConfig:
     cloud_max_seq: int = 256
     cloud_max_batch: int = 4
     engine_page_size: int = 16
+    # fused chunked-prefill + decode (None = whole-suffix admission). The
+    # virtual-clock pricing below needs no change: decode_rounds / prefill
+    # token deltas stay additive under chunking (modeled_mixed_step_s)
+    engine_step_token_budget: Optional[int] = None
+    engine_prefill_chunk: int = 32
     max_new_slm: int = 16           # decode budget, non-graph arms
     max_new_graph: int = 48         # decode budget, GraphRAG arms
     arrival_period_s: float = 1.0   # virtual seconds between arrival steps
@@ -374,15 +379,17 @@ class EACOCluster:
         """Default tier pools: ``n_edge_engines`` reduced-SLM edge engines
         plus one cloud-tier engine, paged KV + prefix cache on."""
         c = self.cfg
+        fused = dict(step_token_budget=c.engine_step_token_budget,
+                     prefill_chunk=c.engine_prefill_chunk)
         edge = [make_edge_engine(
             max_seq=c.edge_max_seq, max_batch=c.edge_max_batch,
             seed=c.seed + 100 + i, kv_layout="paged",
-            page_size=c.engine_page_size, prefix_cache=True)
+            page_size=c.engine_page_size, prefix_cache=True, **fused)
             for i in range(c.n_edge_engines)]
         cloud = [make_cloud_engine(
             max_seq=c.cloud_max_seq, max_batch=c.cloud_max_batch,
             seed=c.seed + 200, kv_layout="paged",
-            page_size=c.engine_page_size, prefix_cache=True)]
+            page_size=c.engine_page_size, prefix_cache=True, **fused)]
         return {"edge": edge, "cloud": cloud}
 
     # ------------------------------------------------------------------
@@ -638,6 +645,9 @@ class EACOCluster:
             else:
                 spec = (self.edge_tier if tier_name == "edge"
                         else self.cloud_tier)
+                # exact under fused chunking too: a budget-mode round is
+                # one decode round + its chunk tokens, so this delta form
+                # equals summing modeled_mixed_step_s per step
                 dt_e = (modeled_prefill_s(spec, e.prefill_tokens - p0)
                         + (e.decode_rounds - r0)
                         * modeled_decode_round_s(spec))

@@ -97,6 +97,20 @@ def modeled_decode_round_s(tier: TierSpec) -> float:
     return 1.0 / tier.tokens_per_s
 
 
+def modeled_mixed_step_s(tier: TierSpec, chunk_tokens: float) -> float:
+    """Virtual-clock duration of one FUSED chunked-prefill + decode step:
+    a decode round for the resident batch plus ``chunk_tokens`` prompt
+    tokens of one request's bounded prefill chunk, priced at the tier's
+    prefill rate. This is how ``pump_engines`` and the serving benches
+    charge token-budget steps on the logical timeline — a step's cost is
+    additive in its decode round and its chunk, so summing per-step costs
+    equals ``modeled_prefill_s`` over the chunked tokens plus
+    ``modeled_decode_round_s`` over the rounds (the delta formula the
+    simulator already uses stays exact under chunking)."""
+    return (modeled_decode_round_s(tier)
+            + max(float(chunk_tokens), 0.0) / tier.prefill_tokens_per_s)
+
+
 @dataclass(frozen=True)
 class CostWeights:
     """delta2 default 0.1 reproduces the paper's Table 4 arithmetic
@@ -122,6 +136,6 @@ __all__ = [
     "TierSpec", "CostWeights", "GPU_PEAK_TFLOPS_FP64", "TPU_PEAK_TFLOPS_BF16",
     "PAPER_EDGE", "PAPER_CLOUD", "TPU_EDGE", "TPU_CLOUD",
     "inference_tflops", "generation_delay", "time_cost_tflops", "total_cost",
-    "modeled_prefill_s", "modeled_decode_round_s",
+    "modeled_prefill_s", "modeled_decode_round_s", "modeled_mixed_step_s",
     "TABLE1_TOKENS",
 ]

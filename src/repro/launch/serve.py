@@ -64,6 +64,14 @@ def main():
                     action=argparse.BooleanOptionalAction,
                     help="share KV pages across common prompt prefixes "
                          "(paged layout only; --no-prefix-cache disables)")
+    ap.add_argument("--step-token-budget", type=int, default=None,
+                    help="fused chunked-prefill + decode: per-step token "
+                         "budget mixing every resident decode row with one "
+                         "bounded prefill chunk (paged layout only; "
+                         "default: whole-suffix admission)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="max prompt tokens prefilled per fused step "
+                         "(with --step-token-budget)")
     ap.add_argument("--slo-class", default="interactive",
                     choices=["interactive", "batch"],
                     help="SLO class tagged on every prompt (interactive "
@@ -102,10 +110,15 @@ def main():
                         or args.breaker_threshold is not None):
         raise SystemExit("--chaos/--hedge-ms/--breaker-threshold need the "
                          "scheduler: drop --static")
+    if args.static and args.step_token_budget is not None:
+        raise SystemExit("--step-token-budget is a continuous-serving "
+                         "feature: drop --static")
     eng = ServingEngine(cfg, max_seq=args.max_seq, max_batch=args.max_batch,
                         kv_layout=args.kv_layout, page_size=args.page_size,
                         num_pages=args.num_pages,
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        step_token_budget=args.step_token_budget,
+                        prefill_chunk=args.prefill_chunk)
     kv = (f"paged KV: {eng.num_pages} x {eng.page_size}-token pages, "
           f"prefix cache {'on' if eng.prefix_cache_enabled else 'off'}"
           if eng.kv_layout == "paged" else "contiguous KV lanes")
@@ -145,7 +158,9 @@ def main():
                 cfg, max_seq=args.max_seq, max_batch=args.max_batch,
                 seed=1, kv_layout=args.kv_layout,
                 page_size=args.page_size, num_pages=args.num_pages,
-                prefix_cache=args.prefix_cache)
+                prefix_cache=args.prefix_cache,
+                step_token_budget=args.step_token_budget,
+                prefill_chunk=args.prefill_chunk)
             hedge_s = args.hedge_ms / 1e3
         sched = TierScheduler(pools, preempt=args.preemption,
                               overload_watermark=args.overload_watermark,
@@ -188,6 +203,15 @@ def main():
               f"tokens at {tokens / max(wall, 1e-9):.1f} tok/s; "
               f"preempted {sc['preempted']}, resumed {sc['resumed']}, "
               f"shed {sched.shed_total}; traces: {eng.trace_counts}")
+        if eng.budget_mode:
+            ttfts = sorted(c.ttft_s for c in comps.values())
+            p95 = ttfts[min(len(ttfts) - 1,
+                            int(0.95 * len(ttfts)))] if ttfts else 0.0
+            print(f"[fused-step] budget {eng.step_token_budget} tok/step, "
+                  f"chunk {eng.prefill_chunk}: {eng.mixed_steps} mixed "
+                  f"steps, {eng.prefill_chunks} chunks, budget utilization "
+                  f"{eng.budget_utilization:.0%}, p95 TTFT "
+                  f"{p95 * 1e3:.0f}ms")
         if args.chaos or args.breaker_threshold is not None or hedge_s:
             from repro.serving.health import breaker_states
             br = (breaker_states(sched.breakers, sched.clock())

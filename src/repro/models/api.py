@@ -28,7 +28,8 @@ from repro.models.pdefs import (
 from repro.models.shardctx import constrain
 from repro.models.stacks import (
     Segment, run_segments_append, run_segments_decode, run_segments_full,
-    segments_cache_defs, segments_paged_cache_defs, segments_param_defs,
+    run_segments_fused, segments_cache_defs, segments_paged_cache_defs,
+    segments_param_defs,
 )
 
 
@@ -311,6 +312,54 @@ class Model:
             x[0], jnp.asarray(suffix_len, jnp.int32) - 1, 0, keepdims=False)
         logits = self._logits(params, last[None])
         return logits, new_cache
+
+    def fused_step(self, params, cache, tokens1, positions, page_tables,
+                   chunk_tokens, chunk_suffix_len, chunk_prefix_len,
+                   chunk_page_row, *, page_size: int):
+        """One fused chunked-prefill + decode step against the page arena
+        (Sarathi-style). Runs the ``[B, 1]`` decode for every resident row
+        AND one request's bounded prefill chunk ``chunk_tokens [1, C]``
+        (valid length ``chunk_suffix_len``, appended after
+        ``chunk_prefix_len`` already-resident positions of
+        ``chunk_page_row [n_pages]``) in a single call, sharing one layer
+        scan — see :func:`~repro.models.stacks.run_segments_fused` for the
+        page-disjointness argument that makes the fusion order-invariant.
+
+        Rows of ``page_tables [B, n_pages]`` belonging to mid-prefill or
+        empty slots must be all-trash (their scatters land in page 0, never
+        read); the chunk's own decode row is one of those. Returns
+        ``(decode_logits [B, V], chunk_logits [1, V], new_cache)`` where
+        the chunk logits are taken at the chunk's last valid token — only
+        the FINAL chunk's logits are first-token logits; earlier chunks'
+        are computed and discarded (fixed shape beats a second trace)."""
+        assert self.supports_paged_cache, \
+            f"{self.cfg.arch_id}: decoder has non-pageable cache segments"
+        cfg = self.cfg
+        # decode side (identical to _decode_step's setup)
+        x1 = self._embed(params, tokens1)
+        lengths = positions + 1
+        ctx_d = self._ctx("decode", positions, lengths=lengths, params=params)
+        ctx_d["page_table"] = page_tables
+        ctx_d["page_size"] = page_size
+        # append side (identical to prefill_paged's setup)
+        C = chunk_tokens.shape[1]
+        xc = self._embed(params, chunk_tokens)
+        cpos = jnp.asarray(chunk_prefix_len, jnp.int32) + jnp.arange(C)
+        ctx_a = self._ctx("append", cpos, params=params)
+        ctx_a["page_table"] = chunk_page_row
+        ctx_a["page_size"] = page_size
+        ctx_a["prefix_len"] = jnp.asarray(chunk_prefix_len, jnp.int32)
+        ctx_a["suffix_len"] = jnp.asarray(chunk_suffix_len, jnp.int32)
+        x1, xc, new_cache, _ = run_segments_fused(
+            params, x1, xc, self.dec_segments, ctx_d, ctx_a, cache)
+        x1 = F.rms_norm(x1, params["final_norm"], cfg.rms_eps)
+        dec_logits = self._logits(params, x1[:, 0])
+        xc = F.rms_norm(xc, params["final_norm"], cfg.rms_eps)
+        last = jax.lax.dynamic_index_in_dim(
+            xc[0], jnp.asarray(chunk_suffix_len, jnp.int32) - 1, 0,
+            keepdims=False)
+        chunk_logits = self._logits(params, last[None])
+        return dec_logits, chunk_logits, new_cache
 
     def decode_step_paged(self, params, cache, tokens1, positions,
                           page_table, *, page_size: int):

@@ -147,6 +147,52 @@ def run_segments_append(params, x, segments: List[Segment], ctx, cache):
     return x, new_cache, aux_total
 
 
+def run_segments_fused(params, x1, xc, segments: List[Segment], ctx_d,
+                       ctx_a, cache):
+    """One fused chunked-prefill + decode pass: each layer first appends one
+    request's prefill chunk (``xc [1, C]`` under ``ctx_a`` — page table row,
+    prefix/suffix lengths) into the shared page arena, then runs the
+    single-token decode for every resident row (``x1 [B, 1]`` under
+    ``ctx_d``), chaining the layer's cache entry through both. ONE
+    ``lax.scan`` per segment covers both roles, so layer params are read
+    once per step no matter how the token budget splits between prefill
+    and decode.
+
+    Correctness does not depend on the append/decode order inside a layer:
+    the chunk scatters only into its own slot's private suffix pages, the
+    decode rows scatter only into *their* slots' private pages (mid-prefill
+    and empty rows are masked to the trash page by the caller), and the
+    only physically shared pages — prefix-cache blocks — are read-only on
+    both sides. The chained cache entry therefore equals the two passes run
+    back-to-back, which is what the greedy token-identity gates check."""
+    new_cache = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for s in segments:
+        if s.fwd_append is None:
+            raise NotImplementedError(
+                f"segment {s.name!r} has no paged append path")
+        p = params[s.name]
+        ce = cache.get(s.name)
+        if s.scan and s.n > 1:
+            def body(carry, args, _s=s):
+                h1, hc = carry
+                pl, ce_l = args
+                hc2, ce_mid, aux_a = _s.fwd_append(pl, hc, ctx_a, ce_l)
+                h2, ce2, aux_d = _s.fwd_decode(pl, h1, ctx_d, ce_mid)
+                return (h2, hc2), (ce2, aux_a + aux_d)
+            (x1, xc), (ces, auxs) = jax.lax.scan(body, (x1, xc), (p, ce))
+            if ces:
+                new_cache[s.name] = ces
+            aux_total += jnp.sum(auxs)
+        else:
+            xc, ce_mid, aux_a = s.fwd_append(p, xc, ctx_a, ce)
+            x1, ce2, aux_d = s.fwd_decode(p, x1, ctx_d, ce_mid)
+            if ce2:
+                new_cache[s.name] = ce2
+            aux_total += aux_a + aux_d
+    return x1, xc, new_cache, aux_total
+
+
 def run_segments_decode(params, x1, segments: List[Segment], ctx, cache):
     """Single-token step through all segments, updating the cache."""
     new_cache = {}
@@ -174,5 +220,5 @@ def run_segments_decode(params, x1, segments: List[Segment], ctx, cache):
 __all__ = [
     "Segment", "segments_param_defs", "segments_cache_defs",
     "segments_paged_cache_defs", "run_segments_full", "run_segments_decode",
-    "run_segments_append",
+    "run_segments_append", "run_segments_fused",
 ]

@@ -65,6 +65,59 @@ paged mode, enough allocatable pages (free + LRU-evictable) for the
 request's *unshared* pages. ``step()`` runs ONE fused decode for all slots
 at ``[max_batch, 1]``.
 
+**Fused chunked-prefill + decode (the token-budget state machine).**
+Passing ``step_token_budget`` (paged layout only) replaces stop-the-world
+admission with a Sarathi-style fused step. The machinery:
+
+- *Async admission*: :meth:`admit` becomes host-only — it plans, maps
+  shared prefix pages, CoW-copies a matched tail and reserves fresh pages,
+  but runs NO model compute. The slot parks **mid-prefill**
+  (``prefill_done < prompt_tokens``, ``pending is None``) with its decode
+  row masked: page-table row all trash, token ``pad``, position 0 — so the
+  fixed-shape decode can carry it inertly (a 1-token attention over the
+  trash page is finite and its result is never read).
+- *Budgeted steps*: each :meth:`dispatch` packs every resident decode row
+  (one token each) plus ONE bounded prefill chunk of the highest-priority
+  mid-prefill resident into ``step_token_budget`` tokens. The chunk runs
+  through the same ``fwd_append`` path (and chunked append-attention
+  kernel) as whole-suffix prefill, fused with the decode in a single jit
+  (:meth:`Model.fused_step` -> ``run_segments_fused``) that compiles
+  exactly once — zero decode retraces, and chunk tokens are always padded
+  to one fixed ``_pad_bucket(prefill_chunk)`` bucket. When decodes alone
+  meet the budget, a chunk still rides along only for an *interactive*
+  head (a small starvation guard); with no decodes resident the chunk runs
+  through the ordinary suffix-prefill jit at the same fixed bucket.
+- *Deferred first token*: chunk logits are computed every chunk at a fixed
+  shape but only the FINAL chunk's are first-token logits — that step
+  samples the pending token, unmasks the decode row (real page table,
+  position ``prompt_tokens``), stamps ``first_token_at`` (engine
+  :attr:`EngineCompletion.ttft_s`) and — only now — inserts the prompt
+  into the prefix index (indexing pages before their KV is written would
+  let a later admission map garbage read-only).
+- *Async dispatch hazards*: :meth:`step` is ``harvest -> dispatch ->
+  collect``, but a scheduler may dispatch EVERY engine and collect at the
+  end of its round, overlapping host-side planning with device compute
+  (JAX async dispatch — nothing blocks until ``collect`` fetches the
+  sampled tokens). Between dispatch and collect the slot table may change
+  under the in-flight step (preempt, cancel, crash): ``collect`` applies a
+  result only if the slot still holds the same ``req_id`` in the same
+  phase, and a stale in-flight write to a since-freed page is harmless —
+  a reader only gathers positions below its own length, and every such
+  position in a re-allocated private page is rewritten by its new owner
+  before that owner's length covers it (shared pages are only ever
+  indexed after being fully written).
+- *Preempt / crash of a half-prefilled resident*: nothing special —
+  ``preempt`` snapshots zero emitted tokens and the full budget (prefill
+  compute already spent on chunks is the only loss; greedy resume is
+  token-identical), ``crash`` drops the slot with everything else.
+- *Accounting*: a step's cost is additive — ``decode_rounds`` counts steps
+  with >= 1 live decode row, ``prefill_tokens`` counts chunk tokens — so
+  the virtual-clock delta formula ``modeled_prefill_s(Δtokens) + Δrounds *
+  modeled_decode_round_s`` (and its per-step form
+  :func:`~repro.core.cost_model.modeled_mixed_step_s`) stays exact under
+  chunking. ``mixed_steps`` / ``prefill_chunks`` / ``budget_utilization``
+  expose the mix.
+
 **Feasibility is explicit, never silent.** A prompt longer than
 ``max_seq - 1`` tokens can never leave room for a single generated token;
 admitting it truncated would silently drop the prompt *tail* — which in a
@@ -114,8 +167,13 @@ engine.
 returning seconds; default ``time.perf_counter``) — a simulator injecting a
 :class:`~repro.core.clock.VirtualClock` gets logical residency times that
 compose with its queue waits instead of mixing wall and event time. The
-``prefill_s``/``decode_s`` accumulators deliberately stay on the wall
-clock: they measure real jit compute for ``engine_time="wall"``.
+compute timers are explicitly wall-clock and NAMED so:
+``prefill_wall_s``/``decode_wall_s`` measure real jit compute for
+``engine_time="wall"`` (``prefill_s``/``decode_s`` remain as read-only
+aliases), while the *logical* counters — ``prefill_tokens``,
+``decode_rounds``, ``prefill_chunks``, ``mixed_steps`` — are pure
+functions of the request stream, so DST replays that compare engine
+progress stay byte-identical regardless of host speed.
 
 All jitted functions run at fixed shapes — decode, sampling, page-copy and
 (contiguous) insert compile exactly once per engine config; prefill
@@ -165,6 +223,9 @@ class GenStats:
     prefix_hits: int = 0           # admissions that shared >= 1 prefix token
     prefix_misses: int = 0         # paged admissions with nothing shared
     prefix_tokens_shared: int = 0  # prompt tokens served from cached pages
+    mixed_steps: int = 0           # fused steps carrying a chunk AND decodes
+    prefill_chunks: int = 0        # bounded prefill chunks run (budget mode)
+    budget_utilization: float = 0.0  # tokens used / step budget, mean
 
     @property
     def tokens_per_s(self) -> float:
@@ -197,6 +258,9 @@ class EngineCompletion:
     prompt_tokens: int
     new_tokens: int
     time_in_engine_s: float      # admit -> finish (prefill + resident decode)
+    ttft_s: float = 0.0          # admit -> first token (engine clock; 0 in
+    #                              whole-suffix mode, where admit blocks
+    #                              through the first sample)
 
 
 @dataclass
@@ -221,11 +285,17 @@ class _Slot:
     request: Request
     budget: int                  # per-slot decode budget
     prompt_tokens: int
-    pending: int                 # sampled, not yet emitted/fed token
+    pending: Optional[int]       # sampled, not yet emitted/fed token; None
+    #                              while the slot is still mid-prefill
     admitted_at: float
     page_ids: Optional[np.ndarray] = None   # pages referenced (shared+own)
     out_ids: List[int] = field(default_factory=list)
     enc: List[int] = field(default_factory=list)   # encoded prompt
+    # ---- budget-mode partial-prefill state ----------------------------
+    prefill_done: int = 0        # prompt tokens already in the arena
+    page_row: Optional[np.ndarray] = None   # full page-table row, applied
+    #                              to the decode table at prefill finish
+    first_token_at: Optional[float] = None  # engine clock at first sample
 
 
 @dataclass
@@ -258,7 +328,9 @@ class ServingEngine:
                  max_batch: int = 8, seed: int = 0, params=None,
                  kv_layout: str = "auto", page_size: int = 16,
                  num_pages: Optional[int] = None, prefix_cache: bool = True,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 step_token_budget: Optional[int] = None,
+                 prefill_chunk: int = 32):
         self.cfg = cfg
         self.max_seq = max_seq
         self.max_batch = max_batch
@@ -284,6 +356,20 @@ class ServingEngine:
                 f"{cfg.arch_id}: decoder cache cannot be paged "
                 "(window/int8/SSM/cross state); use kv_layout='contiguous'")
         self.kv_layout = kv_layout
+
+        # ---- fused chunked-prefill + decode (token-budget) config ---------
+        self.budget_mode = step_token_budget is not None
+        if self.budget_mode:
+            if kv_layout != "paged":
+                raise EngineError(
+                    "step_token_budget requires the paged KV layout "
+                    "(chunked prefill appends straight into arena pages)")
+            if step_token_budget < 1 or prefill_chunk < 1:
+                raise EngineError(
+                    f"step_token_budget {step_token_budget} and "
+                    f"prefill_chunk {prefill_chunk} must be >= 1")
+        self.step_token_budget = step_token_budget
+        self.prefill_chunk = min(prefill_chunk, max_seq)
 
         if kv_layout == "paged":
             if page_size % 8 != 0:
@@ -334,10 +420,17 @@ class ServingEngine:
         self._next_req_id = 0
         self._plan_cache = None   # one-entry (request, generation, plan) memo
         self.peak_active = 0      # high-water mark of resident requests
-        self.prefill_s = 0.0      # cumulative engine-lifetime timers
-        self.decode_s = 0.0
+        # wall-clock compute timers (real jit time; see module docstring —
+        # logical progress lives in the token/round counters below)
+        self.prefill_wall_s = 0.0
+        self.decode_wall_s = 0.0
         self.prefill_tokens = 0   # suffix tokens actually prefilled
         self.decode_rounds = 0    # fused decode steps run with active slots
+        self.mixed_steps = 0      # fused steps with a chunk AND >=1 decode
+        self.prefill_chunks = 0   # bounded prefill chunks run (budget mode)
+        self.budget_steps = 0     # budget-mode steps dispatched
+        self.budget_tokens_used = 0  # decode rows + chunk tokens dispatched
+        self._outstanding = None  # in-flight dispatch awaiting collect()
         self.prefix_hits = 0      # engine-lifetime prefix-cache counters
         self.prefix_misses = 0
         self.prefix_tokens_shared = 0
@@ -352,7 +445,8 @@ class ServingEngine:
         # matter how many streams of differing batch mix it serves; prefill
         # traces once per power-of-two pad bucket.
         self.trace_counts: Dict[str, int] = {
-            "prefill": 0, "decode": 0, "sample": 0, "insert": 0, "copy": 0}
+            "prefill": 0, "decode": 0, "sample": 0, "insert": 0, "copy": 0,
+            "fused": 0}
 
         def _prefill_fn(params, tokens, lengths):
             self.trace_counts["prefill"] += 1
@@ -374,6 +468,15 @@ class ServingEngine:
             return self.model.decode_step_paged(
                 params, cache, tokens1, positions, page_tables,
                 page_size=self.page_size)
+
+        def _fused_fn(params, cache, tokens1, positions, page_tables,
+                      chunk_tokens, chunk_suffix_len, chunk_prefix_len,
+                      chunk_page_row):
+            self.trace_counts["fused"] += 1
+            return self.model.fused_step(
+                params, cache, tokens1, positions, page_tables,
+                chunk_tokens, chunk_suffix_len, chunk_prefix_len,
+                chunk_page_row, page_size=self.page_size)
 
         def _sample_fn(logits, temps, key):
             self.trace_counts["sample"] += 1
@@ -421,6 +524,12 @@ class ServingEngine:
                 _copy_page_fn, donate_argnums=(0,) if donate else ())
             self._decode = jax.jit(_decode_paged_fn,
                                    donate_argnums=(1,) if donate else ())
+            if self.budget_mode:
+                self._fused = jax.jit(
+                    _fused_fn, donate_argnums=(1,) if donate else ())
+                # chunk tokens always pad to ONE fixed bucket, so the fused
+                # step and the chunk-only prefill each compile exactly once
+                self._chunk_pad = self._pad_bucket(self.prefill_chunk)
         else:
             self._prefill = jax.jit(_prefill_fn)
             self._decode = jax.jit(_decode_fn,
@@ -446,6 +555,31 @@ class ServingEngine:
     @property
     def decode_traces(self) -> int:
         return self.trace_counts["decode"]
+
+    @property
+    def prefill_s(self) -> float:
+        """Read-only alias of :attr:`prefill_wall_s` (historical name)."""
+        return self.prefill_wall_s
+
+    @property
+    def decode_s(self) -> float:
+        """Read-only alias of :attr:`decode_wall_s` (historical name)."""
+        return self.decode_wall_s
+
+    @property
+    def prefilling_slots(self) -> int:
+        """Residents still mid-prefill (budget mode; no first token yet)."""
+        return sum(1 for s in self._slots
+                   if s is not None and s.pending is None)
+
+    @property
+    def budget_utilization(self) -> float:
+        """Mean fraction of ``step_token_budget`` actually dispatched per
+        budget-mode step (decode rows + chunk tokens)."""
+        if not self.budget_mode or self.budget_steps == 0:
+            return 0.0
+        return self.budget_tokens_used / (
+            self.budget_steps * self.step_token_budget)
 
     @property
     def free_pages(self) -> Optional[int]:
@@ -480,9 +614,13 @@ class ServingEngine:
 
     @property
     def pad_buckets(self) -> List[int]:
-        """Every prefill pad bucket this engine can compile (8, 16, ...,
-        ``max_seq``) — the bound on lifetime prefill traces; also what
-        :meth:`warmup` iterates."""
+        """Every prefill pad bucket this engine can compile — the bound on
+        lifetime prefill traces; also what :meth:`warmup` iterates. In
+        budget mode all prefill runs as fixed-size chunks, so exactly ONE
+        bucket (``_pad_bucket(prefill_chunk)``) is reachable and the
+        power-of-two sweep collapses; otherwise 8, 16, ..., ``max_seq``."""
+        if self.budget_mode:
+            return [self._chunk_pad]
         out, b = [], self._pad_bucket(1)
         while b < self.max_seq:
             out.append(b)
@@ -617,6 +755,30 @@ class ServingEngine:
                 # contents now live in the slot's private copy)
                 self._allocator.free(
                     [src], retain=self._prefix.owns if self._prefix else None)
+            if self.budget_mode:
+                # ---- async admission: NO model compute here ----------
+                # Pages are mapped and reserved, but every prefill token
+                # runs later as budgeted chunks in dispatch(). The slot
+                # parks mid-prefill with a masked decode row (trash page
+                # table, pad token, position 0); the prefix-cache insert
+                # waits for the final chunk — indexing pages before their
+                # KV exists would let a later admission map garbage.
+                page_ids = row[:plan.total_pages].copy()
+                if self._prefix is not None:
+                    if prefix_len:
+                        self.prefix_hits += 1
+                    else:
+                        self.prefix_misses += 1
+                    self.prefix_tokens_shared += prefix_len
+                self.prefill_wall_s += time.perf_counter() - t0
+                rid = self._next_req_id
+                self._next_req_id += 1
+                self._slots[slot] = _Slot(
+                    rid, request, budget, L, None,
+                    admitted_at=self._clock(), page_ids=page_ids, enc=enc,
+                    prefill_done=prefix_len, page_row=row)
+                self.peak_active = max(self.peak_active, self.active_slots)
+                return rid
             suffix = enc[prefix_len:]
             pad_len = self._pad_bucket(len(suffix))
             tokens, _ = self.tok.pad_batch([suffix], pad_len)
@@ -647,7 +809,7 @@ class ServingEngine:
                              jnp.asarray([request.temperature], jnp.float32),
                              sub)
         pending = int(jax.block_until_ready(first)[0])
-        self.prefill_s += time.perf_counter() - t0
+        self.prefill_wall_s += time.perf_counter() - t0
 
         rid = self._next_req_id
         self._next_req_id += 1
@@ -662,14 +824,27 @@ class ServingEngine:
 
     def step(self) -> List[EngineCompletion]:
         """One pump of the pool: harvest pending tokens (retiring finished
-        sequences, freeing their slot and page references), then run ONE
-        fixed-shape decode for whatever remains active."""
+        sequences, freeing their slot and page references), then dispatch
+        and immediately collect ONE fixed-shape device step — a fused
+        decode, or in budget mode a fused chunked-prefill + decode — for
+        whatever remains active. Schedulers wanting async overlap call
+        :meth:`harvest` / :meth:`dispatch` per engine and :meth:`collect`
+        at the end of the round instead."""
+        done = self.harvest()
+        self.dispatch()
+        self.collect()
+        return done
+
+    def harvest(self) -> List[EngineCompletion]:
+        """Emit pending tokens and retire finished sequences (freeing their
+        slot and page references). Mid-prefill residents (budget mode,
+        ``pending is None``) have nothing to emit and are skipped."""
         if self.dead:
             raise EngineError("step: engine crashed; restart() first")
         done: List[EngineCompletion] = []
         now = self._clock()
         for i, s in enumerate(self._slots):
-            if s is None:
+            if s is None or s.pending is None:
                 continue
             finished = (s.pending == self.tok.eos_id
                         or len(s.out_ids) >= s.budget)
@@ -677,32 +852,154 @@ class ServingEngine:
                 s.out_ids.append(s.pending)
                 finished = len(s.out_ids) >= s.budget
             if finished:
+                ft = (s.first_token_at if s.first_token_at is not None
+                      else s.admitted_at)
                 done.append(EngineCompletion(
                     s.req_id, s.request, self.tok.decode(s.out_ids),
                     s.out_ids, s.prompt_tokens, len(s.out_ids),
-                    time_in_engine_s=max(now - s.admitted_at, 0.0)))
+                    time_in_engine_s=max(now - s.admitted_at, 0.0),
+                    ttft_s=max(ft - s.admitted_at, 0.0)))
                 self._free(i)
+        return done
 
-        if self.has_active:
-            self.decode_rounds += 1
-            t0 = time.perf_counter()
+    def _pick_chunk(self, n_decode: int):
+        """Budget policy: which mid-prefill resident advances this step,
+        and by how many tokens. Highest priority first (interactive SLO
+        before batch, then admission order). Decode rows spend one budget
+        token each; the chunk gets what is left, capped at
+        ``prefill_chunk``. A fully decode-consumed budget still yields a
+        small chunk for an *interactive* head (starvation guard — first
+        tokens are what the interactive SLO is about); with no decodes
+        resident the chunk takes the whole ``prefill_chunk``."""
+        cands = [(0 if s.request.slo == "interactive" else 1, s.req_id, i, s)
+                 for i, s in enumerate(self._slots)
+                 if s is not None and s.pending is None]
+        if not cands:
+            return None
+        _, _, ci, cs = min(cands)
+        remaining = cs.prompt_tokens - cs.prefill_done
+        leftover = self.step_token_budget - n_decode
+        if n_decode == 0:
+            clen = min(self.prefill_chunk, remaining)
+        elif leftover > 0:
+            clen = min(self.prefill_chunk, remaining, leftover)
+        elif cs.request.slo == "interactive":
+            clen = min(8, self.prefill_chunk, remaining)
+        else:
+            return None
+        return (ci, cs, clen)
+
+    def dispatch(self) -> None:
+        """Launch the next device step WITHOUT blocking (JAX async
+        dispatch): the fixed-shape decode for every live decode row, fused
+        — in budget mode — with one bounded prefill chunk chosen by
+        :meth:`_pick_chunk`. Results are fetched by :meth:`collect`; a
+        second dispatch before that is an error. No-op when nothing is
+        resident (or, budget mode, nothing fits the policy this step)."""
+        if self.dead:
+            raise EngineError("dispatch: engine crashed; restart() first")
+        if self._outstanding is not None:
+            raise EngineError(
+                "dispatch: a step is already in flight; collect() first")
+        dec = [(i, s.req_id) for i, s in enumerate(self._slots)
+               if s is not None and s.pending is not None]
+        chunk = self._pick_chunk(len(dec)) if self.budget_mode else None
+        if not dec and chunk is None:
+            return
+        t0 = time.perf_counter()
+        out = {"t0": t0, "dec": dec, "dec_tokens": None, "chunk": None}
+        if self.budget_mode:
+            self.budget_steps += 1
+            self.budget_tokens_used += len(dec) + (chunk[2] if chunk else 0)
+        dec_logits = None
+        if chunk is not None:
+            ci, cs, clen = chunk
+            lo = cs.prefill_done
+            ctoks, _ = self.tok.pad_batch([cs.enc[lo:lo + clen]],
+                                          self._chunk_pad)
+            finishing = lo + clen >= cs.prompt_tokens
+            if dec:
+                dec_logits, chunk_logits, self._cache = self._fused(
+                    self.params, self._cache,
+                    jnp.asarray(self._tokens)[:, None],
+                    jnp.asarray(self._positions),
+                    jnp.asarray(self._page_tables),
+                    jnp.asarray(ctoks), jnp.int32(clen), jnp.int32(lo),
+                    jnp.asarray(cs.page_row))
+            else:
+                chunk_logits, self._cache = self._prefill_paged(
+                    self.params, self._cache, jnp.asarray(ctoks),
+                    jnp.int32(clen), jnp.int32(lo),
+                    jnp.asarray(cs.page_row))
+            ctok = None
+            if finishing:     # only the FINAL chunk's logits are the first-
+                self._key, sub = jax.random.split(self._key)  # token logits
+                ctok = self._sample(
+                    chunk_logits,
+                    jnp.asarray([cs.request.temperature], jnp.float32), sub)
+            out["chunk"] = (ci, cs.req_id, clen, finishing, ctok)
+        elif dec:
             args = (self.params, self._cache,
                     jnp.asarray(self._tokens)[:, None],
                     jnp.asarray(self._positions))
             if self.kv_layout == "paged":
                 args += (jnp.asarray(self._page_tables),)
-            logits, self._cache = self._decode(*args)
+            dec_logits, self._cache = self._decode(*args)
+        if dec:
+            self.decode_rounds += 1
+            if chunk is not None:
+                self.mixed_steps += 1
             self._key, sub = jax.random.split(self._key)
-            nxt = np.asarray(jax.block_until_ready(
-                self._sample(logits, jnp.asarray(self._temps), sub)))
-            self.decode_s += time.perf_counter() - t0
-            for i, s in enumerate(self._slots):
-                if s is None:
-                    continue
-                s.pending = int(nxt[i])
-                self._tokens[i] = s.pending
-                self._positions[i] += 1
-        return done
+            out["dec_tokens"] = self._sample(dec_logits,
+                                             jnp.asarray(self._temps), sub)
+        self._outstanding = out
+
+    def collect(self) -> None:
+        """Block on the in-flight step (if any) and apply its results
+        host-side: feed sampled decode tokens back as the next pending
+        token, advance the chunk owner's ``prefill_done``, and — on the
+        final chunk — unmask its decode row, stamp ``first_token_at`` and
+        insert the now-complete prompt into the prefix index. Results are
+        applied only to slots still holding the same request in the same
+        phase, so a preempt/cancel/crash that raced the in-flight step is
+        simply dropped (see the module docstring's hazard notes)."""
+        if self._outstanding is None:
+            return
+        out, self._outstanding = self._outstanding, None
+        nxt = None
+        if out["dec_tokens"] is not None:
+            nxt = np.asarray(jax.block_until_ready(out["dec_tokens"]))
+        ch = out["chunk"]
+        ctok_val = None
+        if ch is not None and ch[4] is not None:
+            ctok_val = int(jax.block_until_ready(ch[4])[0])
+        span = time.perf_counter() - out["t0"]
+        if out["dec"]:
+            self.decode_wall_s += span
+        else:
+            self.prefill_wall_s += span
+        for i, rid in out["dec"]:
+            s = self._slots[i]
+            if s is None or s.req_id != rid or s.pending is None:
+                continue      # retired/preempted while in flight
+            s.pending = int(nxt[i])
+            self._tokens[i] = s.pending
+            self._positions[i] += 1
+        if ch is not None:
+            ci, rid, clen, finishing, _ = ch
+            s = self._slots[ci]
+            if s is not None and s.req_id == rid and s.pending is None:
+                s.prefill_done += clen
+                self.prefill_tokens += clen
+                self.prefill_chunks += 1
+                if finishing:
+                    s.pending = ctok_val
+                    self._tokens[ci] = ctok_val
+                    self._positions[ci] = s.prompt_tokens
+                    self._page_tables[ci] = s.page_row
+                    s.first_token_at = self._clock()
+                    if self._prefix is not None:
+                        self._prefix.insert(s.enc, s.page_row)
 
     def _free(self, slot: int) -> None:
         s = self._slots[slot]
@@ -827,6 +1124,7 @@ class ServingEngine:
         self._positions[:] = 0
         self._temps[:] = 0.0
         self._plan_cache = None
+        self._outstanding = None     # in-flight device step died with it
         return lost
 
     def restart(self) -> None:
@@ -894,10 +1192,11 @@ class ServingEngine:
                 f"request with {len(self._encode(bad))} prompt tokens can "
                 f"never fit max_seq {self.max_seq}; the pump loop would "
                 "spin on it forever")
-        p0, d0 = self.prefill_s, self.decode_s
+        p0, d0 = self.prefill_wall_s, self.decode_wall_s
         t0 = self.trace_counts["prefill"]
         h0, m0, s0 = (self.prefix_hits, self.prefix_misses,
                       self.prefix_tokens_shared)
+        ms0, pc0 = self.mixed_steps, self.prefill_chunks
         queue = list(requests)
         rid_to_idx: Dict[int, int] = {}
         comps: Dict[int, EngineCompletion] = {}
@@ -915,28 +1214,39 @@ class ServingEngine:
         stats = GenStats(
             prompt_tokens=sum(c.prompt_tokens for c in ordered),
             new_tokens=sum(c.new_tokens for c in ordered),
-            prefill_s=self.prefill_s - p0, decode_s=self.decode_s - d0,
+            prefill_s=self.prefill_wall_s - p0,
+            decode_s=self.decode_wall_s - d0,
             prefill_traces=self.trace_counts["prefill"] - t0,
             prefix_hits=self.prefix_hits - h0,
             prefix_misses=self.prefix_misses - m0,
-            prefix_tokens_shared=self.prefix_tokens_shared - s0)
+            prefix_tokens_shared=self.prefix_tokens_shared - s0,
+            mixed_steps=self.mixed_steps - ms0,
+            prefill_chunks=self.prefill_chunks - pc0,
+            budget_utilization=self.budget_utilization)
         return [c.text for c in ordered], stats
 
     # ------------------------------------------------------------------
     def warmup(self, prompt_lens: Iterable[int] = (1,)) -> None:
         """Pre-compile every fixed-shape function (decode, sample, page
-        copy / insert) and EVERY power-of-two prefill bucket up to the
+        copy / insert) and EVERY reachable prefill bucket up to the
         largest implied by ``prompt_lens``, leaving the pool idle. Smaller
         buckets are compiled too because prefix-cache hits shrink the
-        prefilled suffix below the prompt length. Lets benchmarks separate
-        compile from serve time."""
+        prefilled suffix below the prompt length. In budget mode the
+        power-of-two sweep collapses to the single chunk bucket (the only
+        prefill shape :meth:`dispatch` can ever issue) plus the fused
+        step — ``prompt_lens`` no longer matters, and warmup compiles
+        O(1) functions instead of ``log2(max_seq)`` unused ones. Lets
+        benchmarks separate compile from serve time."""
         if self.dead:
             raise EngineError("cannot warm up a crashed engine")
         if self.has_active:
             raise EngineError("cannot warm up a busy engine")
-        cap = max((self._pad_bucket(max(n, 1)) for n in prompt_lens),
-                  default=8)
-        buckets = [b for b in self.pad_buckets if b <= cap]
+        if self.budget_mode:
+            buckets = list(self.pad_buckets)     # just the chunk bucket
+        else:
+            cap = max((self._pad_bucket(max(n, 1)) for n in prompt_lens),
+                      default=8)
+            buckets = [b for b in self.pad_buckets if b <= cap]
         key = jax.random.PRNGKey(0)
         paged = self.kv_layout == "paged"
         # rebind the pool at every call: the cache argument is donated, so
@@ -959,6 +1269,19 @@ class ServingEngine:
         if paged:
             self._cache = self._copy_page(self._cache, jnp.int32(TRASH_PAGE),
                                           jnp.int32(TRASH_PAGE))
+        if self.budget_mode:
+            # warm the fused step: all-trash rows, 1-token chunk — writes
+            # land only on the trash page, results are discarded
+            trash_row = jnp.full((self.pages_per_slot,), TRASH_PAGE,
+                                 jnp.int32)
+            _, cl, self._cache = self._fused(
+                self.params, self._cache,
+                jnp.asarray(self._tokens)[:, None],
+                jnp.asarray(self._positions),
+                jnp.asarray(self._page_tables),
+                jnp.zeros((1, self._chunk_pad), jnp.int32),
+                jnp.int32(1), jnp.int32(0), trash_row)
+            self._sample(cl, jnp.asarray([0.0], jnp.float32), key)
         args = (self.params, self._cache,
                 jnp.asarray(self._tokens)[:, None],
                 jnp.asarray(self._positions))

@@ -3,9 +3,14 @@ with SLO-aware preemption, load shedding, and stuck-work timeouts.
 
 Per-tier priority heaps (edge engines + cloud engine) feed the engines'
 slot pools. ``pump()`` runs one scheduling round: for every tier it admits
-queued requests into whatever slots just freed, then advances that tier's
-engines by one fused decode step each, harvesting per-request completions
-mid-stream. The gate decides the tier; the scheduler keeps the lanes full.
+queued requests into whatever slots just freed, harvests per-request
+completions, and *dispatches* each engine's next step — one fused decode,
+or (engines built with ``step_token_budget``) one fused chunked-prefill +
+decode step whose budget split the engine steers by SLO rank (interactive
+first-token work ahead of batch). Dispatch is asynchronous: the pump
+enqueues every engine's step and only blocks at the very end of the round
+(``collect``), so host-side scheduling overlaps device compute. The gate
+decides the tier; the scheduler keeps the lanes full.
 
 A tier may be backed by a POOL of engines (``{"edge": [e0, e1], "cloud":
 e2}``): the tier shares one queue and the head request is admitted into the
@@ -166,6 +171,12 @@ class Completion:
     slo: str = "batch"
     preemptions: int = 0         # times this request was preempted
     hedged: bool = False         # served by the backup (hedge) submission
+    ttft_s: float = 0.0          # submit -> first token (scheduler clock):
+    #                              queue wait + prior residencies + the
+    #                              engine-side first-token delay of the
+    #                              final admission (an upper bound for
+    #                              preempted-then-resumed requests, whose
+    #                              true first token came even earlier)
 
 
 @dataclass
@@ -397,7 +408,7 @@ class TierScheduler:
             for eng_i, eng in enumerate(pool):
                 if is_stalled(eng_i) or eng.dead or not eng.has_active:
                     continue
-                for ec in eng.step():
+                for ec in eng.harvest():
                     item = self._inflight.pop((tier, eng_i, ec.req_id))
                     item.done = True
                     b = self.breakers.get((tier, eng_i))
@@ -426,11 +437,22 @@ class TierScheduler:
                         engine_wall_s=ec.time_in_engine_s,
                         slo=primary.request.slo,
                         preemptions=item.preemptions,
-                        hedged=item.is_hedge))
+                        hedged=item.is_hedge,
+                        ttft_s=item.queue_wait_s + item.resident_s
+                        + ec.ttft_s))
+                eng.dispatch()
                 # residents on an engine that just stepped made progress
                 for key, it in self._inflight.items():
                     if key[0] == tier and key[1] == eng_i:
                         it.last_progress_at = t_round
+        # collect AFTER every engine has dispatched: host-side scheduling
+        # (planning, page mapping, queue work) for engine N+1 overlapped
+        # the device compute of engine N — JAX async dispatch means nothing
+        # above blocked on a result; only here do we fetch sampled tokens
+        for pool in self.pools.values():
+            for eng in pool:
+                if not eng.dead:
+                    eng.collect()
         return out
 
     # one pump used to serve a whole batch; keep the name as an alias for
@@ -480,6 +502,11 @@ class TierScheduler:
                     "dead": bool(e.dead),
                     "generation": e.engine_generation,
                     "breaker": b.snapshot(now) if b is not None else None,
+                    # fused-step telemetry (all zero off budget mode)
+                    "prefilling": e.prefilling_slots,
+                    "mixed_steps": e.mixed_steps,
+                    "prefill_chunks": e.prefill_chunks,
+                    "budget_utilization": round(e.budget_utilization, 4),
                 })
             tiers[tier] = {
                 "queued": len(q),
